@@ -1,0 +1,60 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the exact published configuration;
+``get_config(name, reduced=True)`` the CPU smoke-test reduction.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+
+ARCHITECTURES: List[str] = [
+    "zamba2_1p2b",
+    "h2o_danube3_4b",
+    "deepseek_coder_33b",
+    "llama3_405b",
+    "command_r_plus_104b",
+    "mamba2_370m",
+    "qwen3_moe_235b_a22b",
+    "llama4_scout_17b_16e",
+    "whisper_large_v3",
+    "internvl2_26b",
+    "paper_demo",
+]
+
+_ALIASES = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "llama3-405b": "llama3_405b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "mamba2-370m": "mamba2_370m",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_16e",
+    "whisper-large-v3": "whisper_large_v3",
+    "internvl2-26b": "internvl2_26b",
+    "paper-demo": "paper_demo",
+}
+
+
+def canonical(name: str) -> str:
+    name = name.replace("-", "_").replace(".", "p")
+    return _ALIASES.get(name, name)
+
+
+def get_config(name: str, reduced: bool = False, **overrides) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    cfg: ModelConfig = mod.config()
+    if reduced:
+        cfg = cfg.reduced()
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def assigned_architectures() -> List[str]:
+    """The ten pool architectures (excludes the paper-demo config)."""
+    return [a for a in ARCHITECTURES if a != "paper_demo"]

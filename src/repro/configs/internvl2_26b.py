@@ -1,0 +1,18 @@
+"""internvl2-26b [vlm] — InternLM2-20b decoder backbone; InternViT STUB.
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553
+[arXiv:2404.16821; hf]. input_specs() provides precomputed patch
+embeddings (n_patches=1024) prepended to the token sequence; loss over
+token positions only. Full attention → long_500k skip.
+"""
+from repro.models.common import VLM, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b", family=VLM,
+        n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+        d_ff=16384, vocab_size=92553, tied_embeddings=False,
+        rope_theta=1000000.0,
+        frontend_dim=3200, n_patches=1024,
+    )

@@ -1,0 +1,15 @@
+"""paper-demo — the ~100M-parameter model used by the end-to-end training
+example (examples/train_small.py): small llama-style decoder whose trainer
+exercises the full continuation-driven runtime (async checkpoint, prefetch,
+metric pump) on CPU.
+"""
+from repro.models.common import DENSE, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="paper-demo", family=DENSE,
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=16384, tied_embeddings=True,
+        rope_theta=10000.0, remat="none", head_pad_to=1, vocab_pad_to=1,
+    )

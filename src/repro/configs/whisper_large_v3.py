@@ -1,0 +1,19 @@
+"""whisper-large-v3 [audio] — enc-dec backbone; conv frontend STUB.
+
+32L (32 enc + 32 dec) d_model=1280 20H (kv=20, MHA) d_ff=5120 vocab=51866
+[arXiv:2212.04356; unverified]. 20 heads pad to 32 for TP16.
+input_specs() provides precomputed frame embeddings (the two conv+GELU
+stem layers are the stub). Sinusoidal decoder positions (DESIGN.md §4).
+"""
+from repro.models.common import AUDIO, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3", family=AUDIO,
+        n_layers=32, n_enc_layers=32, n_dec_layers=32,
+        d_model=1280, n_heads=20, n_kv_heads=20, head_dim=64,
+        d_ff=5120, vocab_size=51866, tied_embeddings=True,
+        rope_theta=0.0,  # sinusoidal/learned positions, not RoPE
+        frontend_dim=1280, max_target_len=448,
+    )

@@ -1,0 +1,32 @@
+"""MPI-Continuations-style completion-notification runtime for JAX.
+
+The paper's primary contribution, adapted per DESIGN.md §2. Public API
+(names mirror the paper's interface):
+
+    engine = Engine()                      # or default_engine()
+    cr = engine.continue_init(info)        # MPIX_Continue_init
+    flag = engine.continue_when(op, cb, cb_data, status, cr)    # MPIX_Continue
+    flag = engine.continue_all(ops, cb, cb_data, statuses, cr)  # MPIX_Continueall
+    cr.test() / cr.wait() / cr.free()      # MPI_Test / MPI_Wait / Request_free
+"""
+from repro.core.completable import (ArrayOp, Completable, HostTaskOp,
+                                    PredicateOp, TimerOp)
+from repro.core.continuation import (CallbackError, ConcurrentCompletionError,
+                                     Continuation, ContinuationRequest,
+                                     CRState)
+from repro.core.engine import Engine, default_engine, reset_default_engine
+from repro.core.info import (THREAD_ANY, THREAD_APPLICATION, ContinueInfo,
+                             make_info)
+from repro.core.status import STATUS_IGNORE, OpState, Status
+from repro.core.testsome import TestsomeManager
+from repro.core.transport import ANY_SOURCE, ANY_TAG, RecvOp, SendOp, Transport
+
+__all__ = [
+    "ArrayOp", "Completable", "HostTaskOp", "PredicateOp", "TimerOp",
+    "CallbackError", "ConcurrentCompletionError", "Continuation",
+    "ContinuationRequest", "CRState", "Engine", "default_engine",
+    "reset_default_engine", "THREAD_ANY", "THREAD_APPLICATION",
+    "ContinueInfo", "make_info", "STATUS_IGNORE", "OpState", "Status",
+    "TestsomeManager", "ANY_SOURCE", "ANY_TAG", "RecvOp", "SendOp",
+    "Transport",
+]

@@ -1,0 +1,214 @@
+"""Completable operations — what continuations can be attached to.
+
+In MPI the unit of asynchrony is the request; in a JAX framework it is
+anything that completes out-of-line with the control thread:
+
+* ``ArrayOp``     — a (pytree of) ``jax.Array``; complete when dispatch has
+                    finished materializing every leaf (``Array.is_ready()``).
+* ``HostTaskOp``  — a ``concurrent.futures.Future`` (checkpoint shard writes,
+                    data-pipeline fills, metric fetches). Push-notified.
+* ``TimerOp``     — completes at a deadline (heartbeat/straggler timeouts).
+* ``PredicateOp`` — completes when a user predicate flips true.
+* ``MessageOp``   — transport send/recv handles (see ``transport.py``).
+* ``ContinuationRequest`` — CRs are completable themselves (paper §3.2:
+  a continuation may be attached to a CR and registered with another CR).
+
+Ops follow the paper's ownership rule: attaching a continuation *consumes*
+the handle (at most one continuation per op; re-attach only for persistent
+ops after restart).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, Optional, Sequence
+
+from repro.core.status import OneShotLatch, OpState, Status
+
+ReadyHook = Callable[["Completable", Status], None]
+
+
+class Completable:
+    """Base class for asynchronous operations.
+
+    Subclasses either support *polling* (override ``_poll``) or *push*
+    notification (call ``_complete`` from wherever the work finishes), or
+    both. The continuation engine uses push hooks when available and falls
+    back to polling scans during progress calls — mirroring an MPI library
+    discovering completions inside any MPI call.
+    """
+
+    #: persistent ops may be restarted and re-attached (MPI persistent reqs)
+    persistent: bool = False
+
+    def __init__(self) -> None:
+        self._latch = OneShotLatch()
+        self._state = OpState.PENDING
+        self._status = Status()
+        self._hooks: list[ReadyHook] = []
+        self._hook_lock = threading.Lock()
+        self._attached = False
+
+    # -- completion publishing ------------------------------------------------
+    def _complete(self, status: Optional[Status] = None,
+                  state: OpState = OpState.COMPLETE) -> bool:
+        """Publish completion exactly once; fire hooks on the caller thread."""
+        if not self._latch.fire():
+            return False
+        if status is not None:
+            self._status = status
+        self._state = state
+        if state == OpState.CANCELLED:
+            self._status.cancelled = True
+        with self._hook_lock:
+            hooks, self._hooks = list(self._hooks), []
+        for hook in hooks:
+            hook(self, self._status)
+        return True
+
+    # -- probing ----------------------------------------------------------------
+    def _poll(self) -> bool:
+        """Subclass probe: return True when the underlying work is done.
+
+        Only called while PENDING; must be cheap and non-blocking.
+        """
+        return False
+
+    def done(self) -> bool:
+        """Non-blocking completion test (drives poll-mode ops forward)."""
+        if self._state is not OpState.PENDING:
+            return True
+        if self._poll():
+            self._complete(self._make_status())
+            return True
+        return False
+
+    def _make_status(self) -> Status:
+        return self._status
+
+    # -- introspection ---------------------------------------------------------
+    @property
+    def state(self) -> OpState:
+        return self._state
+
+    @property
+    def status(self) -> Status:
+        return self._status
+
+    @property
+    def supports_push(self) -> bool:
+        """True if completion will arrive via ``_complete`` without polling."""
+        return False
+
+    # -- hooks ------------------------------------------------------------------
+    def add_ready_hook(self, hook: ReadyHook) -> None:
+        """Run ``hook`` on completion; immediately if already complete."""
+        run_now = False
+        with self._hook_lock:
+            if self._state is OpState.PENDING and not self._latch.fired:
+                self._hooks.append(hook)
+            else:
+                run_now = True
+        if run_now:
+            hook(self, self._status)
+
+    # -- cancellation ------------------------------------------------------------
+    def cancel(self) -> bool:
+        """Best-effort cancel; True if the op transitioned to CANCELLED."""
+        return self._complete(Status(cancelled=True), OpState.CANCELLED)
+
+    # -- attachment bookkeeping ---------------------------------------------------
+    def mark_attached(self) -> None:
+        if self._attached and not self.persistent:
+            raise RuntimeError(
+                "operation already has a continuation attached; non-persistent "
+                "handles are consumed on attach (paper §2.2)")
+        self._attached = True
+
+    def release_attachment(self) -> None:
+        self._attached = False
+
+
+def _tree_leaves(tree: Any) -> Sequence[Any]:
+    import jax
+    return jax.tree_util.tree_leaves(tree)
+
+
+class ArrayOp(Completable):
+    """Completion of JAX async dispatch for a pytree of ``jax.Array``.
+
+    Poll-mode by default (JAX has no completion callback API); an engine
+    waiter thread can block on it when the CR allows ``thread=any``.
+    """
+
+    def __init__(self, tree: Any, payload: Any = None) -> None:
+        super().__init__()
+        self._leaves = [x for x in _tree_leaves(tree) if hasattr(x, "is_ready")]
+        self._status.payload = tree if payload is None else payload
+
+    def _poll(self) -> bool:
+        while self._leaves and self._leaves[-1].is_ready():
+            self._leaves.pop()
+        return not self._leaves
+
+    def block(self) -> None:
+        """Blocking wait used by waiter threads (push emulation)."""
+        import jax
+        for leaf in self._leaves:
+            jax.block_until_ready(leaf)
+        self._leaves = []
+        self.done()
+
+
+class HostTaskOp(Completable):
+    """Completion of a ``concurrent.futures.Future`` — push-notified."""
+
+    def __init__(self, future: Future) -> None:
+        super().__init__()
+        self._future = future
+        future.add_done_callback(self._on_done)
+
+    @property
+    def supports_push(self) -> bool:
+        return True
+
+    def _on_done(self, fut: Future) -> None:
+        if fut.cancelled():
+            self._complete(Status(cancelled=True), OpState.CANCELLED)
+            return
+        err = fut.exception()
+        if err is not None:
+            self._complete(Status(error=err), OpState.FAILED)
+        else:
+            self._complete(Status(payload=fut.result()))
+
+    def _poll(self) -> bool:  # completion arrives via _on_done
+        return self._future.done()
+
+    def cancel(self) -> bool:
+        self._future.cancel()  # _on_done publishes the transition
+        return self._state is OpState.CANCELLED
+
+
+class TimerOp(Completable):
+    """Completes once ``deadline`` (monotonic seconds) has passed."""
+
+    def __init__(self, delay_s: float) -> None:
+        super().__init__()
+        self.deadline = time.monotonic() + delay_s
+
+    def _poll(self) -> bool:
+        return time.monotonic() >= self.deadline
+
+
+class PredicateOp(Completable):
+    """Completes when a user-supplied predicate returns True."""
+
+    def __init__(self, predicate: Callable[[], bool], payload: Any = None) -> None:
+        super().__init__()
+        self._predicate = predicate
+        self._status.payload = payload
+
+    def _poll(self) -> bool:
+        return bool(self._predicate())

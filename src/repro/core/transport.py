@@ -1,0 +1,238 @@
+"""In-process multi-rank message transport.
+
+The container is a single process, so "ranks" are threads and the network is
+a set of mailboxes with MPI-style two-sided matching (source/tag, wildcards,
+non-overtaking per (src,dst,tag)). Semantics kept from MPI where they matter
+to the paper:
+
+* non-blocking ``isend``/``irecv`` returning completable ops,
+* eager vs. rendezvous send completion (``eager_threshold``),
+* receive cancellation (→ cancelled status observed by callbacks,
+  paper Listing 4),
+* completion discovered *inside* a transport call fires continuation hooks on
+  the calling thread — the analogue of "continuations may be invoked as soon
+  as any thread calls into MPI" (paper §3),
+* optional simulated link latency via a background delivery thread, so
+  completions are genuinely asynchronous in benchmarks.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+from repro.core.completable import Completable
+from repro.core.status import OpState, Status
+
+ANY_SOURCE = -1
+ANY_TAG = -1
+
+
+def _payload_nbytes(payload: Any) -> int:
+    if isinstance(payload, (bytes, bytearray, memoryview)):
+        return len(payload)
+    nbytes = getattr(payload, "nbytes", None)
+    if nbytes is not None:
+        return int(nbytes)
+    return 64  # control-message default
+
+
+class MessageOp(Completable):
+    """Base for send/recv handles."""
+
+    def __init__(self, transport: "Transport") -> None:
+        super().__init__()
+        self._transport = transport
+
+    def _poll(self) -> bool:
+        # Message completion is push-based (delivered by the matcher).
+        return False
+
+    @property
+    def supports_push(self) -> bool:
+        return True
+
+
+class SendOp(MessageOp):
+    def __init__(self, transport: "Transport", source: int, dest: int,
+                 tag: int, payload: Any) -> None:
+        super().__init__(transport)
+        self.source, self.dest, self.tag = source, dest, tag
+        self.payload = payload
+        self.nbytes = _payload_nbytes(payload)
+
+
+class RecvOp(MessageOp):
+    def __init__(self, transport: "Transport", rank: int, source: int,
+                 tag: int) -> None:
+        super().__init__(transport)
+        self.rank, self.source, self.tag = rank, source, tag
+
+    def matches(self, src: int, tag: int) -> bool:
+        return ((self.source == ANY_SOURCE or self.source == src)
+                and (self.tag == ANY_TAG or self.tag == tag))
+
+    def cancel(self) -> bool:
+        """Remove a posted receive (paper §3.6); no-op if already matched."""
+        if self._transport._cancel_recv(self):
+            return self._complete(Status(cancelled=True), OpState.CANCELLED)
+        return False
+
+
+class _Mailbox:
+    """Per-rank matching state: posted receives + unexpected messages."""
+
+    __slots__ = ("lock", "posted", "unexpected")
+
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.posted: List[RecvOp] = []
+        self.unexpected: List[SendOp] = []
+
+
+class Transport:
+    def __init__(self, n_ranks: int, *, engine=None,
+                 eager_threshold: int = 4096,
+                 latency_s: float = 0.0) -> None:
+        self.n_ranks = n_ranks
+        self.engine = engine
+        self.eager_threshold = eager_threshold
+        self.latency_s = latency_s
+        self._boxes = [_Mailbox() for _ in range(n_ranks)]
+        self._stats_lock = threading.Lock()
+        self.stats = {"sends": 0, "recvs": 0, "matches": 0, "cancelled": 0}
+        self._shutdown = threading.Event()
+        self._delivery: Optional[threading.Thread] = None
+        if latency_s > 0:
+            self._dq: list = []
+            self._dq_seq = itertools.count()
+            self._dq_lock = threading.Lock()
+            self._dq_cv = threading.Condition(self._dq_lock)
+            self._delivery = threading.Thread(
+                target=self._delivery_loop, name="transport-delivery",
+                daemon=True)
+            self._delivery.start()
+
+    # ------------------------------------------------------------------- API
+    def isend(self, source: int, dest: int, tag: int, payload: Any) -> SendOp:
+        op = SendOp(self, source, dest, tag, payload)
+        with self._stats_lock:
+            self.stats["sends"] += 1
+        if self.latency_s > 0:
+            with self._dq_cv:
+                heapq.heappush(self._dq, (time.monotonic() + self.latency_s,
+                                          next(self._dq_seq), op))
+                self._dq_cv.notify()
+        else:
+            self._deliver(op)
+        self._on_enter()
+        return op
+
+    def irecv(self, rank: int, source: int = ANY_SOURCE,
+              tag: int = ANY_TAG) -> RecvOp:
+        op = RecvOp(self, rank, source, tag)
+        with self._stats_lock:
+            self.stats["recvs"] += 1
+        box = self._boxes[rank]
+        matched: Optional[SendOp] = None
+        with box.lock:
+            for i, send in enumerate(box.unexpected):
+                if op.matches(send.source, send.tag):
+                    matched = box.unexpected.pop(i)
+                    break
+            if matched is None:
+                box.posted.append(op)
+        if matched is not None:
+            self._finish_pair(matched, op)
+        self._on_enter()
+        return op
+
+    def send(self, source: int, dest: int, tag: int, payload: Any,
+             timeout: float = 30.0) -> None:
+        """Blocking convenience send."""
+        op = self.isend(source, dest, tag, payload)
+        self._block(op, timeout)
+
+    def recv(self, rank: int, source: int = ANY_SOURCE, tag: int = ANY_TAG,
+             timeout: float = 30.0) -> Status:
+        op = self.irecv(rank, source, tag)
+        self._block(op, timeout)
+        return op.status
+
+    # -------------------------------------------------------------- internals
+    def _block(self, op: Completable, timeout: float) -> None:
+        deadline = time.monotonic() + timeout
+        while op.state is OpState.PENDING:
+            if self.engine is not None:
+                self.engine.tick()
+            if time.monotonic() > deadline:
+                raise TimeoutError("transport op timed out")
+            time.sleep(1e-5)
+
+    def _on_enter(self) -> None:
+        """Run eligible ready continuations — 'thread inside MPI' semantics."""
+        if self.engine is not None:
+            self.engine._drain_ready(limit=self.engine.inline_limit,
+                                     inline=True)
+
+    def _deliver(self, send: SendOp) -> None:
+        box = self._boxes[send.dest]
+        matched: Optional[RecvOp] = None
+        with box.lock:
+            for i, recv in enumerate(box.posted):
+                if recv.matches(send.source, send.tag):
+                    matched = box.posted.pop(i)
+                    break
+            if matched is None:
+                box.unexpected.append(send)
+        if matched is not None:
+            self._finish_pair(send, matched)
+        elif send.nbytes <= self.eager_threshold:
+            # Eager: buffered by the "network"; sender completes immediately.
+            send._complete(Status(source=send.source, tag=send.tag,
+                                  count=send.nbytes))
+
+    def _finish_pair(self, send: SendOp, recv: RecvOp) -> None:
+        with self._stats_lock:
+            self.stats["matches"] += 1
+        recv._complete(Status(source=send.source, tag=send.tag,
+                              payload=send.payload, count=send.nbytes))
+        send._complete(Status(source=send.source, tag=send.tag,
+                              count=send.nbytes))
+
+    def _cancel_recv(self, op: RecvOp) -> bool:
+        box = self._boxes[op.rank]
+        with box.lock:
+            try:
+                box.posted.remove(op)
+            except ValueError:
+                return False
+        with self._stats_lock:
+            self.stats["cancelled"] += 1
+        return True
+
+    def _delivery_loop(self) -> None:
+        if self.engine is not None:
+            self.engine.register_internal_thread()
+        while not self._shutdown.is_set():
+            with self._dq_cv:
+                while not self._dq and not self._shutdown.is_set():
+                    self._dq_cv.wait(timeout=0.05)
+                if self._shutdown.is_set():
+                    return
+                when, _, op = self._dq[0]
+                now = time.monotonic()
+                if when > now:
+                    self._dq_cv.wait(timeout=when - now)
+                    continue
+                heapq.heappop(self._dq)
+            self._deliver(op)
+
+    def shutdown(self) -> None:
+        self._shutdown.set()
+        if self._delivery is not None:
+            with self._dq_cv:
+                self._dq_cv.notify_all()
+            self._delivery.join(timeout=2.0)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for (GQA, causal, sliding-window) attention.
+
+Also the "xla" production path used by the dry-run/roofline compiles.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              q_offset: Optional[jax.Array] = None,
+              scale: Optional[float] = None,
+              lean: bool = False) -> jax.Array:
+    """Multi-head attention with grouped KV heads.
+
+    q: (B, Sq, H, D);  k, v: (B, Sk, KV, D) with H % KV == 0.
+    ``q_offset``: absolute position of q[0] minus that of k[0] (decode uses
+    q_offset = cache_len - Sq ≥ 0); default 0 (self-attention, aligned).
+    ``window`` > 0 restricts each query to the last ``window`` keys
+    (sliding-window attention). Softmax in fp32.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    groups = H // KV
+    scale = D ** -0.5 if scale is None else scale
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    qpos = jnp.arange(Sq)[:, None] + (0 if q_offset is None else q_offset)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    if lean:
+        # §Perf: (S,S) tensors stay bf16; only the max/sum reductions are
+        # fp32 (flash-attention numerics) — halves attention HBM traffic
+        s_ = jnp.einsum("bqhd,bkhd->bhqk", q, k) * jnp.asarray(scale, q.dtype)
+        s_ = jnp.where(mask[None, None], s_, jnp.asarray(-3e38, s_.dtype))
+        m = jax.lax.stop_gradient(
+            jnp.max(s_.astype(jnp.float32), axis=-1, keepdims=True))
+        p = jnp.exp(s_ - m.astype(s_.dtype))
+        denom = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+        probs = (p.astype(jnp.float32) / denom).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)

@@ -1,0 +1,42 @@
+"""Kernel implementation selection.
+
+Models call kernel ``ops`` wrappers; the active implementation is resolved
+per-call → per-context override → backend default:
+
+* ``"pallas"``           — real TPU lowering (the deployment target),
+* ``"pallas_interpret"`` — kernel body interpreted on CPU (tests),
+* ``"xla"``              — the pure-jnp reference path (CPU smoke tests and
+                           the dry-run/roofline compiles, which target the
+                           CPU backend where TPU Pallas cannot lower).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_TLS = threading.local()
+VALID = ("xla", "pallas", "pallas_interpret")
+
+
+def backend_default() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def resolve(impl: str | None = None) -> str:
+    if impl is None:
+        impl = getattr(_TLS, "impl", None) or backend_default()
+    if impl not in VALID:
+        raise ValueError(f"unknown kernel impl {impl!r}; expected {VALID}")
+    return impl
+
+
+@contextlib.contextmanager
+def use_impl(impl: str):
+    prev = getattr(_TLS, "impl", None)
+    _TLS.impl = impl
+    try:
+        yield
+    finally:
+        _TLS.impl = prev

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: fused RMSNorm over the last axis.
+
+Tiling: rows are flattened to (R, D); the grid walks row blocks. Each step
+holds a (block_rows, D) tile of x plus the (D,) scale in VMEM, computes the
+fp32 row-wise rsqrt(mean-square) and writes the scaled tile. D is kept whole
+per tile (lane-dim multiple of 128 for the VPU); block_rows is chosen so the
+working set stays ≪ VMEM (~16 MB on v5e):
+
+    bytes ≈ block_rows · D · (2 in + 2 out) + 4·D  → block_rows = 256 at
+    D = 16384 is ~16 MB? no: 256·16384·4 = 16 MB — we cap block_rows so the
+    tile stays under ~4 MB and let the grid scale instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                     # (bR, D)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def pick_block_rows(n_rows: int, d: int, budget_bytes: int = 4 << 20) -> int:
+    per_row = d * 8  # fp32 in-tile + output
+    block = max(1, min(n_rows, budget_bytes // per_row))
+    # favor multiples of 8 (sublane) when possible
+    if block >= 8:
+        block -= block % 8
+    while n_rows % block:
+        block -= 1
+    return max(block, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret", "block_rows"))
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5,
+            block_rows: int = 0, interpret: bool = False) -> jax.Array:
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    rows = xf.shape[0]
+    br = block_rows or pick_block_rows(rows, d)
+    grid = (rows // br,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    return out.reshape(orig_shape)

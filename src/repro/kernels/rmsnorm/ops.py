@@ -1,0 +1,15 @@
+"""Dispatching wrapper for RMSNorm: xla | pallas | pallas_interpret."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import impl as impl_mod
+from repro.kernels.rmsnorm import kernel, ref
+
+
+def rmsnorm(x, scale, eps: float = 1e-5, impl: str | None = None):
+    impl = impl_mod.resolve(impl)
+    if impl == "xla":
+        return ref.rmsnorm(x, scale, eps)
+    return kernel.rmsnorm(x, scale, eps=eps,
+                          interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+import jax.numpy as jnp
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    """RMS-normalize the last axis and apply the learned scale.
+
+    Computation in fp32, result cast back to x.dtype (LLaMA convention).
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)

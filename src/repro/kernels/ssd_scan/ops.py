@@ -1,0 +1,17 @@
+"""Dispatching wrapper for the SSD scan: xla (chunked jnp) | pallas."""
+from __future__ import annotations
+
+from repro.kernels import impl as impl_mod
+from repro.kernels.ssd_scan import kernel, ref
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 128,
+             impl: str | None = None):
+    """Returns y (B, T, H, P). Final-state output only on the xla path
+    (training starts from zero state; decode uses the explicit recurrence)."""
+    impl = impl_mod.resolve(impl)
+    if impl == "xla":
+        y, _ = ref.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk)
+        return y
+    return kernel.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk,
+                           interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,101 @@
+"""Oracles for the Mamba-2 SSD (state-space duality) scan.
+
+``ssd_sequential``: the exact per-timestep recurrence — the correctness
+oracle for both the chunked jnp path and the Pallas kernel.
+
+``ssd_chunked``: the block-decomposed einsum formulation (Mamba-2 paper
+§6) used as the "xla" production path: intra-chunk quadratic term +
+inter-chunk state passing, all matmul-shaped — this is what the Pallas
+kernel mirrors tile-by-tile.
+
+Shapes:
+    x  (B, T, H, P)   inputs per head (P = head_dim)
+    dt (B, T, H)      positive step sizes (softplus+bias applied upstream)
+    A  (H,)           negative per-head decay
+    Bm (B, T, G, N)   input projections (G groups broadcast over heads)
+    Cm (B, T, G, N)   output projections
+    D  (H,)           skip gain
+Returns y (B, T, H, P) and the final state (B, H, P, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(m: jax.Array, n_heads: int) -> jax.Array:
+    """(B, T, G, N) → (B, T, H, N) by repeating groups over their heads."""
+    g = m.shape[2]
+    return jnp.repeat(m, n_heads // g, axis=2)
+
+
+def ssd_sequential(x, dt, A, Bm, Cm, D):
+    B_, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Bh = _expand_groups(Bm.astype(jnp.float32), H)
+    Ch = _expand_groups(Cm.astype(jnp.float32), H)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs          # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * Af)         # (B,H)
+        inc = jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt, bt)
+        state = state * decay[..., None, None] + inc
+        yt = jnp.einsum("bhn,bhpn->bhp", ct, state)
+        return state, yt
+
+    state0 = jnp.zeros((B_, H, P, N), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3) + xf * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int = 64):
+    B_, T, H, P = x.shape
+    assert T % chunk == 0, "sequence length must be divisible by chunk"
+    nC = T // chunk
+    Bh = _expand_groups(Bm.astype(jnp.float32), H)
+    Ch = _expand_groups(Cm.astype(jnp.float32), H)
+    xf = x.astype(jnp.float32).reshape(B_, nC, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B_, nC, chunk, H)
+    Bh = Bh.reshape(B_, nC, chunk, H, -1)
+    Ch = Ch.reshape(B_, nC, chunk, H, -1)
+    Af = A.astype(jnp.float32)
+
+    dA = dtf * Af                                  # (B,C,Q,H) log-decay
+    cum = jnp.cumsum(dA, axis=2)                   # inclusive within chunk
+    total = cum[:, :, -1, :]                       # (B,C,H)
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i ≥ j (decay j+1..i)
+    Ldiff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,C,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(Ldiff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh) * L \
+        * dtf[:, :, None, :, :]                    # dt_j on the j axis
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xf)
+
+    # chunk states: contributions decayed to the chunk end
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)      # (B,C,Q,H)
+    S = jnp.einsum("bcqh,bcqhp,bcqhn->bchpn", dtf * decay_to_end, xf, Bh)
+
+    # inter-chunk scan: running state entering each chunk
+    def chunk_step(state, inputs):
+        s_c, tot_c = inputs
+        new = state * jnp.exp(tot_c)[..., None, None] + s_c
+        return new, state                          # emit state *entering* c
+
+    state0 = jnp.zeros((B_, H, P, jnp.shape(Bh)[-1]), jnp.float32)
+    final, entering = jax.lax.scan(
+        chunk_step, state0,
+        (S.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    entering = entering.transpose(1, 0, 2, 3, 4)   # (B,C,H,P,N)
+
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Ch * jnp.exp(cum)[..., None],
+                         entering)
+    y = (y_intra + y_inter).reshape(B_, T, H, P) \
+        + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final

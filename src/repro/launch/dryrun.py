@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh).
+
+The two lines above run before ANY other import — jax locks the device
+count at first init, and only the dry-run may see 512 placeholder devices
+(assignment requirement; tests/benches must see 1).
+
+Per cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. builds the step program (train_step / prefill_step / serve_step) with
+     ShapeDtypeStruct inputs and NamedShardings from the logical rules,
+  3. ``.lower().compile()`` — failures here are sharding bugs,
+  4. dumps ``memory_analysis()`` / ``cost_analysis()`` / parsed collective
+     bytes as JSON for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Accounting modes (DESIGN.md §6):
+  * ``--exact``: layers unrolled (``scan_layers=False``) and, for train,
+    a single-microbatch program — no ``while`` loops, so cost_analysis and
+    the collective parse are exact; totals scale by the microbatch count.
+  * default (scan): fast compile; used for the multi-pod validation pass
+    and for full-program memory_analysis.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.shapes import (SHAPES, ShapeSpec, input_specs,
+                                 is_applicable, microbatches_for)
+from repro.models import encdec, lm
+from repro.models.common import AUDIO, VLM, ModelConfig
+from repro.optim import OptConfig
+from repro.roofline.hlo import collective_bytes, model_flops, roofline_terms
+from repro.serve.steps import make_decode_step
+from repro.sharding import specs_to_shardings, use_sharding
+from repro.train.sharding import batch_logical_axes, rules_for
+from repro.train.train_step import (init_train_state, make_train_step,
+                                    train_state_specs)
+
+
+def _shape_structs(fn, *args) -> Any:
+    return jax.eval_shape(fn, *args)
+
+
+def serve_state_specs(cfg: ModelConfig) -> Any:
+    if cfg.family == AUDIO:
+        from repro.models.attention import kv_cache_specs
+        if cfg.scan_layers:
+            cross = {"k": (None, "batch", None, None, "tp"),
+                     "v": (None, "batch", None, None, "tp")}
+            return {"cross": cross,
+                    "self": kv_cache_specs(True, cfg)}
+        cross_one = {"k": ("batch", None, None, "tp"),
+                     "v": ("batch", None, None, "tp")}
+        return {"cross": [cross_one] * cfg.n_dec_layers,
+                "self": [kv_cache_specs(False, cfg)] * cfg.n_dec_layers}
+    return lm.cache_specs(cfg)
+
+
+def build_program(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                  exact: bool, opts: Optional[Dict[str, Any]] = None
+                  ) -> Dict[str, Any]:
+    opts = opts or {}
+    """Returns {lowered, n_repeat, tokens} for the cell."""
+    rules = rules_for(shape.kind)
+    key = jax.random.PRNGKey(0)
+    batch_structs = input_specs(cfg, shape)
+
+    with use_sharding(mesh, rules):
+        batch_shardings = specs_to_shardings(
+            batch_logical_axes(batch_structs), mesh, rules)
+
+        if shape.kind == "train":
+            state_dtype = jnp.bfloat16 if (
+                opts.get("opt_dtype") == "bf16"
+                or (opts.get("opt_dtype") is None
+                    and cfg.param_count() > 2e11)) else jnp.float32
+            opt = OptConfig(state_dtype=state_dtype)
+            n_mb = opts.get("microbatches") or microbatches_for(cfg)
+            state_structs = _shape_structs(
+                lambda: init_train_state(key, cfg, opt))
+            state_shardings = specs_to_shardings(
+                train_state_specs(cfg), mesh, rules)
+            if exact:
+                # single-microbatch exact program; totals scale ×n_mb
+                mb = shape.global_batch // n_mb
+                sub = ShapeSpec(shape.name, "train", shape.seq_len, mb)
+                batch_structs = input_specs(cfg, sub)
+                batch_shardings = specs_to_shardings(
+                    batch_logical_axes(batch_structs), mesh, rules)
+                gst = train_state_specs(cfg)["params"] \
+                    if opts.get("grad_rs") else None
+                step = make_train_step(cfg, opt, num_microbatches=1,
+                                       grad_spec_tree=gst)
+                n_repeat = n_mb
+            else:
+                gst = train_state_specs(cfg)["params"] \
+                    if opts.get("grad_rs") else None
+                step = make_train_step(cfg, opt, num_microbatches=n_mb,
+                                       grad_spec_tree=gst)
+                n_repeat = 1
+            jf = jax.jit(step, in_shardings=(state_shardings, batch_shardings),
+                         donate_argnums=(0,))
+            lowered = jf.lower(state_structs, batch_structs)
+            tokens = shape.global_batch * shape.seq_len
+            return {"lowered": lowered, "n_repeat": n_repeat,
+                    "tokens": tokens}
+
+        params_init = (encdec.init_params if cfg.family == AUDIO
+                       else lm.init_params)
+        params_structs = _shape_structs(lambda: params_init(key, cfg))
+        pspecs = (encdec.param_specs if cfg.family == AUDIO
+                  else lm.param_specs)(cfg)
+        param_shardings = specs_to_shardings(pspecs, mesh, rules)
+
+        if shape.kind == "prefill":
+            from repro.serve.steps import make_prefill_step
+            cache_len = shape.seq_len
+            step = make_prefill_step(cfg, cache_len)
+            jf = jax.jit(step, in_shardings=(param_shardings,
+                                             batch_shardings))
+            lowered = jf.lower(params_structs, batch_structs)
+            return {"lowered": lowered, "n_repeat": 1,
+                    "tokens": shape.global_batch * shape.seq_len}
+
+        # decode / long: one token against a seq_len cache
+        B = shape.global_batch
+        if cfg.family == AUDIO:
+            from repro.launch.shapes import WHISPER_CROSS_LEN
+            audio_struct = jax.ShapeDtypeStruct(
+                (B, WHISPER_CROSS_LEN, cfg.frontend_dim), jnp.bfloat16)
+            cache_structs = _shape_structs(
+                lambda p, a: encdec.init_decode_state(p, a, cfg,
+                                                      shape.seq_len),
+                params_structs, audio_struct)
+        else:
+            cache_structs = _shape_structs(
+                lambda: lm.init_cache(cfg, B, shape.seq_len))
+        cache_shardings = specs_to_shardings(serve_state_specs(cfg), mesh,
+                                             rules)
+        step = make_decode_step(cfg)
+        tok_sharding = specs_to_shardings(
+            {"t": ("batch", None)}, mesh, rules)["t"]
+        jf = jax.jit(step,
+                     in_shardings=(param_shardings, cache_shardings,
+                                   tok_sharding, None),
+                     donate_argnums=(1,))
+        lowered = jf.lower(params_structs, cache_structs,
+                           jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                           jax.ShapeDtypeStruct((), jnp.int32))
+        return {"lowered": lowered, "n_repeat": 1, "tokens": B}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, exact: bool,
+             debug_mesh: bool = False,
+             opts: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    opts = opts or {}
+    shape = SHAPES[shape_name]
+    overrides: Dict[str, Any] = {"attn_impl": "xla",
+                                 "scan_layers": (not exact)}
+    if opts.get("remat"):
+        overrides["remat"] = opts["remat"]
+    if opts.get("lean"):
+        overrides["lean_attention"] = True
+    if opts.get("gather_weights"):
+        overrides["gather_weights"] = True
+    if opts.get("n_layers"):
+        overrides["n_layers"] = opts["n_layers"]
+    cfg = get_config(arch, **overrides)
+    if opts.get("dispatch") and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=opts["dispatch"]))
+    if opts.get("ssm_chunk") and cfg.ssm is not None:
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm,
+                                         chunk_size=opts["ssm_chunk"]))
+    if cfg.family == "hybrid":
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    ok, reason = is_applicable(cfg, shape)
+    result: Dict[str, Any] = {
+        "arch": cfg.name, "shape": shape_name, "multi_pod": multi_pod,
+        "exact": exact, "applicable": ok, "reason": reason,
+    }
+    if not ok:
+        result["status"] = "skipped"
+        return result
+    mesh = (make_debug_mesh(multi_pod=multi_pod) if debug_mesh
+            else make_production_mesh(multi_pod=multi_pod))
+    chips = mesh.size
+    result["opts"] = {k: v for k, v in opts.items() if v}
+    t0 = time.time()
+    prog = build_program(cfg, shape, mesh, exact=exact, opts=opts)
+    lowered = prog["lowered"]
+    result["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t0, 2)
+
+    ma = compiled.memory_analysis()
+    result["memory"] = {
+        "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+        "output_bytes_per_device": int(ma.output_size_in_bytes),
+        "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+        "alias_bytes_per_device": int(ma.alias_size_in_bytes),
+        "fits_16g_hbm": bool(
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes < 16e9),
+    }
+    ca = compiled.cost_analysis() or {}
+    n_rep = prog["n_repeat"]
+    flops_dev = float(ca.get("flops", 0.0)) * n_rep
+    bytes_dev = float(ca.get("bytes accessed", 0.0)) * n_rep
+    txt = compiled.as_text()
+    if opts.get("dump_hlo"):
+        with open(opts["dump_hlo"], "w") as f:
+            f.write(txt)
+    from repro.roofline.hlo import opcode_bytes_histogram
+    result["opcode_hist"] = opcode_bytes_histogram(txt)
+    colls = collective_bytes(txt)
+    for v in colls.values():
+        v["bytes"] *= n_rep
+        v["count"] *= n_rep
+    coll_dev = sum(v["bytes"] for v in colls.values())
+    result["collectives"] = colls
+    result["cost"] = {"flops_per_device": flops_dev,
+                      "bytes_per_device": bytes_dev,
+                      "collective_bytes_per_device": coll_dev,
+                      "n_repeat_scaling": n_rep}
+    terms = roofline_terms(flops_dev, bytes_dev, coll_dev, chips)
+    mf = model_flops(cfg, shape.kind, prog["tokens"])
+    terms["model_flops"] = mf
+    terms["useful_flops_ratio"] = mf / terms["flops_global"] \
+        if terms["flops_global"] else 0.0
+    result["roofline"] = terms
+    result["status"] = "ok"
+    result["chips"] = chips
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--exact", action="store_true",
+                    help="unrolled layers, single-microbatch (roofline mode)")
+    ap.add_argument("--debug-mesh", action="store_true",
+                    help="tiny 2x2 mesh (CI tests)")
+    ap.add_argument("--out", default=None)
+    # hillclimb levers (§Perf)
+    ap.add_argument("--remat", choices=["none", "full", "dots"], default=None)
+    ap.add_argument("--dispatch", choices=["einsum", "scatter"], default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--opt-dtype", choices=["f32", "bf16"], default=None)
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--grad-rs", action="store_true",
+                    help="constrain grads to weight sharding (reduce-scatter)")
+    ap.add_argument("--dump-hlo", default=None,
+                    help="write the compiled SPMD module text to this path")
+    ap.add_argument("--lean", action="store_true",
+                    help="memory-lean attention/rope (bf16 tensors, fp32 "
+                         "reductions)")
+    ap.add_argument("--gather-weights", action="store_true",
+                    help="ZeRO-3 just-in-time weight all-gather (§Perf)")
+    ap.add_argument("--n-layers", type=int, default=None,
+                    help="layer-count override (two-point extrapolation "
+                         "when the full unrolled compile exceeds host RAM)")
+    args = ap.parse_args()
+    opts = {"remat": args.remat, "dispatch": args.dispatch,
+            "microbatches": args.microbatches, "opt_dtype": args.opt_dtype,
+            "ssm_chunk": args.ssm_chunk, "grad_rs": args.grad_rs,
+            "dump_hlo": args.dump_hlo, "lean": args.lean,
+            "gather_weights": args.gather_weights,
+            "n_layers": args.n_layers}
+    result = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                      exact=args.exact, debug_mesh=args.debug_mesh,
+                      opts=opts)
+    js = json.dumps(result, indent=2, default=str)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(js)
+    print(js)
+    if result["status"] not in ("ok", "skipped"):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (assignment requirement). The single-pod mesh is
+16×16 = 256 chips (data, model); the multi-pod mesh adds the scale-out
+"pod" axis: 2×16×16 = 512 chips. The pod axis composes with data for
+batch/FSDP sharding (logical rules in repro.sharding), so the multi-pod
+dry-run proves cross-pod gradient reduction shards.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
+                    multi_pod: bool = False):
+    """Small mesh for CI-scale dry-run tests (8 virtual devices)."""
+    shape = (2, n_data, n_model) if multi_pod else (n_data, n_model)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,6 @@
+from repro.models.common import (AUDIO, DENSE, HYBRID, MOE, SSM, VLM,
+                                 ModelConfig, MoEConfig, SSMConfig)
+from repro.models import lm, encdec
+
+__all__ = ["AUDIO", "DENSE", "HYBRID", "MOE", "SSM", "VLM", "ModelConfig",
+           "MoEConfig", "SSMConfig", "lm", "encdec"]

@@ -1,0 +1,233 @@
+"""GQA attention block: train/prefill/decode paths, RoPE, SWA, TP head
+padding, cross-attention (enc-dec), and KV-cache management.
+
+Head padding (DESIGN.md §5): head counts not divisible by the TP degree
+(llama4 40, deepseek 56, whisper 20) are padded to ``cfg.padded_heads`` with
+zero-initialized weights — the o-projection rows of padded heads are zero so
+the function computed is exactly the unpadded architecture, while every
+einsum shards cleanly over the 16-way model axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import _init_dense, apply_rope, gathered
+from repro.sharding import constrain
+
+
+def head_mask(cfg: ModelConfig):
+    """Boolean (padded_heads,) mask of REAL q-head slots.
+
+    Padded head slots sit at the tail of each kv group (head n belongs to
+    kv group n // padded_kv_groups; slot j = n % padded_kv_groups is real
+    iff j < kv_groups and the group is a real kv head). llama4 40→48 is
+    8 groups of (5 real + 1 pad); deepseek 56→64 is 8×(7+1)."""
+    import numpy as np
+    Gp = cfg.padded_kv_groups
+    n = np.arange(cfg.padded_heads)
+    return ((n // Gp < cfg.n_kv_heads) & (n % Gp < cfg.kv_groups))
+
+
+def init_attention(key, cfg: ModelConfig, width: int = 0) -> Dict[str, Any]:
+    width = width or cfg.d_model
+    hd = cfg.resolved_head_dim
+    Hp, KVp = cfg.padded_heads, cfg.padded_kv_heads
+    ks = jax.random.split(key, 4)
+    wq = _init_dense(ks[0], (width, Hp, hd), cfg.param_dtype)
+    wk = _init_dense(ks[1], (width, KVp, hd), cfg.param_dtype)
+    wv = _init_dense(ks[2], (width, KVp, hd), cfg.param_dtype)
+    wo = _init_dense(ks[3], (Hp, hd, width), cfg.param_dtype,
+                     scale=(Hp * hd) ** -0.5)
+    if Hp != cfg.n_heads or KVp != cfg.n_kv_heads:
+        mask = jnp.asarray(head_mask(cfg))
+        # zero q/o weights of padded slots: function preserved exactly
+        wq = wq * mask[None, :, None].astype(wq.dtype)
+        wo = wo * mask[:, None, None].astype(wo.dtype)
+    if KVp != cfg.n_kv_heads:
+        wk = wk.at[:, cfg.n_kv_heads:, :].set(0)
+        wv = wv.at[:, cfg.n_kv_heads:, :].set(0)
+    return {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+
+
+def attention_specs(cfg: ModelConfig = None) -> Dict[str, Any]:
+    # kv heads < TP degree → shard head_dim instead, IF it divides 16
+    # (danube's head_dim=120 does not: its small kv weights replicate on tp)
+    hd_ax = "tp" if cfg is None or cfg.resolved_head_dim % 16 == 0 else None
+    return {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", None, hd_ax),
+        "wv": ("fsdp", None, hd_ax),
+        "wo": ("heads", None, "fsdp"),
+    }
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: Optional[int] = None) -> Dict[str, Any]:
+    """Ring-buffer KV cache. SWA archs bound it at the window size."""
+    hd = cfg.resolved_head_dim
+    if cfg.window:
+        max_len = min(max_len, cfg.window)
+    shape = (batch, max_len, cfg.padded_kv_heads, hd)
+    if n_layers:
+        shape = (n_layers,) + shape
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+    }
+
+
+def kv_cache_specs(layer_stacked: bool,
+                   cfg: ModelConfig = None) -> Dict[str, Any]:
+    hd_ax = "tp" if cfg is None or cfg.resolved_head_dim % 16 == 0 else None
+    lead = (None,) if layer_stacked else ()
+    return {"k": lead + ("batch", "kv_seq", None, hd_ax),
+            "v": lead + ("batch", "kv_seq", None, hd_ax)}
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    g = cfg.gather_weights
+    hd_ax = "tp" if cfg.resolved_head_dim % 16 == 0 else None
+    wq = gathered(params["wq"], None, "heads", None, gather=g)
+    wk = gathered(params["wk"], None, None, hd_ax, gather=g)
+    wv = gathered(params["wv"], None, None, hd_ax, gather=g)
+    q = jnp.einsum("bsd,dhk->bshk", x, wq.astype(cfg.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, wk.astype(cfg.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, wv.astype(cfg.dtype))
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta, lean=cfg.lean_attention)
+        k = apply_rope(k, positions, cfg.rope_theta, lean=cfg.lean_attention)
+    q = constrain(q, "batch", None, "act_heads", None)
+    return q, k, v
+
+
+def attention_block(params, x: jax.Array, cfg: ModelConfig, *,
+                    causal: bool = True,
+                    positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence attention (train / prefill), no cache output."""
+    from repro.kernels.flash_attention import ops as attn_ops
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    groups = cfg.padded_kv_groups
+    if groups > 1 and cfg.attn_impl == "xla":
+        # materialized repeat + constraint shards heads over TP cleanly
+        k = constrain(jnp.repeat(k, groups, axis=2), "batch", None, "act_heads", None)
+        v = constrain(jnp.repeat(v, groups, axis=2), "batch", None, "act_heads", None)
+    o = attn_ops.attention(q, k, v, causal=causal, window=cfg.window,
+                           impl=cfg.attn_impl, lean=cfg.lean_attention)
+    o = constrain(o, "batch", None, "act_heads", None)
+    wo = gathered(params["wo"], "heads", None, None,
+                  gather=cfg.gather_weights)
+    return jnp.einsum("bshk,hkd->bsd", o, wo.astype(cfg.dtype))
+
+
+def prefill_attention(params, x, cfg: ModelConfig, cache: Dict[str, Any],
+                      positions: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Prefill: full-seq attention + populate the (possibly ring) cache."""
+    from repro.kernels.flash_attention import ops as attn_ops
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    groups = cfg.padded_kv_groups
+    kr, vr = k, v
+    if groups > 1 and cfg.attn_impl == "xla":
+        kr = constrain(jnp.repeat(k, groups, axis=2), "batch", None, "act_heads", None)
+        vr = constrain(jnp.repeat(v, groups, axis=2), "batch", None, "act_heads", None)
+    o = attn_ops.attention(q, kr, vr, causal=True, window=cfg.window,
+                           impl=cfg.attn_impl, lean=cfg.lean_attention)
+    o = constrain(o, "batch", None, "act_heads", None)
+    wo = gathered(params["wo"], "heads", None, None,
+                  gather=cfg.gather_weights)
+    out = jnp.einsum("bshk,hkd->bsd", o, wo.astype(cfg.dtype))
+    L = cache["k"].shape[1]
+    if S >= L:                     # keep last L positions (SWA ring)
+        cache = {"k": k[:, S - L:], "v": v[:, S - L:]}
+    else:
+        cache = {"k": cache["k"].at[:, :S].set(k),
+                 "v": cache["v"].at[:, :S].set(v)}
+    return out, cache
+
+
+def decode_attention(params, x, cfg: ModelConfig, cache: Dict[str, Any],
+                     pos: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode against a cache of length L.
+
+    ``pos``: scalar int32, absolute position of the new token. For SWA the
+    cache is a ring buffer of size ``window`` indexed by ``pos % window``.
+
+    GQA is computed with *grouped einsums* — the cache is never repeated to
+    the query-head count (a 16× cache blowup at 32k otherwise). Sharding is
+    flash-decoding style: the cache's sequence axis shards over the model
+    axis ("kv_seq" rule), the softmax/value contractions over it become
+    small per-layer all-reduces, and activation heads stay replicated
+    ("act_heads" → None in decode rule tables).
+    """
+    B, S1, _ = x.shape        # S1 == 1
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    q = constrain(q, "batch", None, "act_heads", None)
+    L = cache["k"].shape[1]
+    slot = (pos % L).astype(jnp.int32) if cfg.window else pos.astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    ck = constrain(ck, "batch", "kv_seq", None, None)
+    cv = constrain(cv, "batch", "kv_seq", None, None)
+    KVp = cfg.padded_kv_heads
+    G = cfg.padded_heads // KVp
+    qg = q.reshape(B, S1, KVp, G, -1)
+    # masking by absolute position held in each slot
+    idx = jnp.arange(L, dtype=jnp.int32)
+    if cfg.window:
+        # slot i holds the latest absolute position ≤ pos congruent to i
+        abs_pos = idx + ((pos - idx) // L) * L
+        valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - cfg.window)
+    else:
+        valid = idx <= pos
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, ck).astype(jnp.float32) \
+        * cfg.resolved_head_dim ** -0.5
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cfg.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", probs, cv)
+    o = o.reshape(B, S1, cfg.padded_heads, -1)
+    o = constrain(o, "batch", None, "act_heads", None)
+    wo = gathered(params["wo"], "heads", None, None,
+                  gather=cfg.gather_weights)
+    out = jnp.einsum("bshk,hkd->bsd", o, wo.astype(cfg.dtype))
+    return out, {"k": ck, "v": cv}
+
+
+# ------------------------------------------------------------ cross-attn
+def init_cross_attention(key, cfg: ModelConfig) -> Dict[str, Any]:
+    return init_attention(key, cfg)
+
+
+def precompute_cross_kv(params, enc_out: jax.Array, cfg: ModelConfig
+                        ) -> Dict[str, Any]:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(cfg.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(cfg.dtype))
+    return {"k": k, "v": v}
+
+
+def cross_attention(params, x: jax.Array, cross_kv: Dict[str, Any],
+                    cfg: ModelConfig) -> jax.Array:
+    from repro.kernels.flash_attention import ops as attn_ops
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cfg.dtype))
+    q = constrain(q, "batch", None, "heads", None)
+    k, v = cross_kv["k"], cross_kv["v"]
+    groups = cfg.padded_kv_groups
+    if groups > 1 and cfg.attn_impl == "xla":
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    o = attn_ops.attention(q, k, v, causal=False, window=0,
+                           impl=cfg.attn_impl)
+    o = constrain(o, "batch", None, "act_heads", None)
+    wo = gathered(params["wo"], "heads", None, None,
+                  gather=cfg.gather_weights)
+    return jnp.einsum("bshk,hkd->bsd", o, wo.astype(cfg.dtype))

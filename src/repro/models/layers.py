@@ -1,0 +1,175 @@
+"""Shared layers: norms, rotary embeddings, gated MLP, embeddings.
+
+Pure-functional: ``init_*`` builds param dicts, ``*_specs`` builds the
+matching logical-axis trees (structure equality is unit-tested), forward
+functions take (params, x).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.sharding import constrain
+
+
+def gathered(w: jax.Array, *tp_axes, gather: bool = False) -> jax.Array:
+    """ZeRO-3 just-in-time weight gather (§Perf ``gather_weights``):
+    constrain the weight to its tensor-parallel-only sharding, forcing the
+    partitioner to all-gather the fsdp shards at the use site instead of
+    reducing activation-sized partials after the matmul."""
+    if not gather:
+        return w
+    return constrain(w, *tp_axes)
+
+
+def _init_dense(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = (1.0 / fan_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------- norm
+def init_rmsnorm(width: int, dtype) -> Dict[str, Any]:
+    return {"scale": jnp.ones((width,), dtype=jnp.float32)}
+
+
+def rmsnorm_specs() -> Dict[str, Any]:
+    return {"scale": (None,)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    from repro.kernels.rmsnorm import ops as rms_ops
+    return rms_ops.rmsnorm(x, params["scale"], eps=eps)
+
+
+# --------------------------------------------------------------------- rope
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)         # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               lean: bool = False) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+
+    ``lean`` (§Perf): angles/rotators computed fp32 on the small (S, hd/2)
+    table, but applied to x in its own dtype — removes the (B,S,H,hd) fp32
+    convert/multiply traffic of the baseline."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    if lean:
+        cos = jnp.cos(angles)[..., None, :].astype(x.dtype)
+        sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+        x1, x2 = jnp.split(x, 2, axis=-1)
+        return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                               axis=-1)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pe(positions: jax.Array, width: int) -> jax.Array:
+    """Fixed sinusoidal embedding for arbitrary (possibly traced) positions.
+
+    positions: (S,) → (S, width). Works for one decode position as well as
+    full sequences (no table materialization).
+    """
+    pos = positions.astype(jnp.float32)[:, None]
+    dim = jnp.arange(0, width, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / width)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def sinusoidal_positions(seq_len: int, width: int) -> jax.Array:
+    """Whisper-style fixed positional embedding (encoder)."""
+    return sinusoidal_pe(jnp.arange(seq_len), width)
+
+
+# ---------------------------------------------------------------------- mlp
+def init_mlp(key, width: int, d_ff: int, dtype) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": _init_dense(k1, (width, d_ff), dtype),
+        "wg": _init_dense(k2, (width, d_ff), dtype),
+        "wo": _init_dense(k3, (d_ff, width), dtype),
+    }
+
+
+def mlp_specs() -> Dict[str, Any]:
+    return {"wi": ("fsdp", "tp"), "wg": ("fsdp", "tp"), "wo": ("tp", "fsdp")}
+
+
+def mlp(params, x: jax.Array, gather: bool = False) -> jax.Array:
+    """SwiGLU MLP with TP-sharded hidden dim."""
+    wi = gathered(params["wi"], None, "tp", gather=gather)
+    wg = gathered(params["wg"], None, "tp", gather=gather)
+    wo = gathered(params["wo"], "tp", None, gather=gather)
+    h = jnp.einsum("...d,df->...f", x, wi)
+    g = jnp.einsum("...d,df->...f", x, wg)
+    h = jax.nn.silu(g) * h
+    h = constrain(h, "batch", None, "tp")
+    return jnp.einsum("...f,fd->...d", h, wo)
+
+
+# ---------------------------------------------------------------- embedding
+def init_embedding(key, cfg: ModelConfig) -> Dict[str, Any]:
+    p = {"tokens": (jax.random.normal(key, (cfg.padded_vocab, cfg.d_model))
+                    * 0.02).astype(cfg.param_dtype)}
+    if not cfg.tied_embeddings:
+        p["head"] = _init_dense(jax.random.fold_in(key, 1),
+                                (cfg.d_model, cfg.padded_vocab),
+                                cfg.param_dtype, scale=cfg.d_model ** -0.5)
+    return p
+
+
+def embedding_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    p = {"tokens": ("fsdp", "tp")}
+    if not cfg.tied_embeddings:
+        # untied head: contract replicated d, produce vocab-sharded logits
+        p["head"] = ("fsdp", "vocab")
+    return p
+
+
+def embed_tokens(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    emb = gathered(params["tokens"], None, "tp",
+                   gather=cfg.gather_weights)
+    x = emb[tokens].astype(cfg.dtype)
+    return constrain(x, "batch", None, None)
+
+
+def lm_logits(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Vocab-sharded logits; padded vocab tail masked to -inf."""
+    if cfg.tied_embeddings:
+        emb = gathered(params["tokens"], "vocab", None,
+                       gather=cfg.gather_weights)
+        logits = jnp.einsum("...d,vd->...v", x, emb.astype(cfg.dtype))
+    else:
+        head = gathered(params["head"], None, "vocab",
+                        gather=cfg.gather_weights)
+        logits = jnp.einsum("...d,dv->...v", x, head.astype(cfg.dtype))
+    if cfg.padded_vocab != cfg.vocab_size:
+        vpos = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(vpos < cfg.vocab_size, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    return constrain(logits, "batch", None, "vocab")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean CE over valid tokens; fp32; vocab axis may be sharded."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - label_logit
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,150 @@
+"""Mixture-of-Experts block.
+
+Two dispatch implementations (DESIGN.md §9 — the contrast is a planned
+§Perf iteration):
+
+* ``"einsum"``  — GShard-style capacity-based one-hot dispatch/combine
+  einsums. Shards perfectly under GSPMD (experts over the model axis,
+  groups over data → all-to-all emitted by the partitioner) but pays
+  one-hot matmul FLOPs comparable to the expert compute itself.
+* ``"scatter"`` — sort-free scatter/gather dispatch into the same
+  (expert, capacity) buffer layout: no dispatch FLOPs, indexing only.
+
+Both drop tokens beyond expert capacity (capacity_factor), matching the
+published GShard/Switch training recipe.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import (_init_dense, gathered, init_mlp, mlp,
+                                 mlp_specs)
+from repro.sharding import constrain
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict[str, Any]:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init_dense(ks[0], (d, m.n_experts), jnp.float32),
+        "wi": _init_dense(ks[1], (m.n_experts, d, m.d_ff), cfg.param_dtype),
+        "wg": _init_dense(ks[2], (m.n_experts, d, m.d_ff), cfg.param_dtype),
+        "wo": _init_dense(ks[3], (m.n_experts, m.d_ff, d), cfg.param_dtype,
+                          scale=m.d_ff ** -0.5),
+    }
+    if m.shared_d_ff:
+        p["shared"] = init_mlp(ks[4], d, m.shared_d_ff, cfg.param_dtype)
+    return p
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    p = {
+        "router": ("fsdp", None),
+        "wi": ("expert", "fsdp", None),
+        "wg": ("expert", "fsdp", None),
+        "wo": ("expert", None, "fsdp"),
+    }
+    if cfg.moe.shared_d_ff:
+        p["shared"] = mlp_specs()
+    return p
+
+
+def expert_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    m = cfg.moe
+    cap = int(tokens_per_group * m.top_k / m.n_experts * m.capacity_factor)
+    cap = max(cap, 1)
+    return cap + (-cap) % 4 if cap > 4 else cap
+
+
+def _route(params, x: jax.Array, cfg: ModelConfig
+           ) -> Tuple[jax.Array, jax.Array]:
+    """Router: top-k gates (renormalized) + expert indices. x: (B,S,d)."""
+    m = cfg.moe
+    logits = jnp.einsum("bsd,de->bse", x.astype(m.router_dtype),
+                        params["router"].astype(m.router_dtype))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, m.top_k)           # (B,S,k)
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+    return gate, idx
+
+
+def load_balance_loss(gate_probs_mean: jax.Array,
+                      dispatch_frac: jax.Array) -> jax.Array:
+    """Switch/GShard auxiliary loss term (used by the trainer)."""
+    E = gate_probs_mean.shape[-1]
+    return E * jnp.sum(gate_probs_mean * dispatch_frac)
+
+
+def _positions_in_expert(idx: jax.Array, n_experts: int) -> jax.Array:
+    """idx: (B, S, k) → position of each assignment within its expert,
+    counted in (s, k) order per batch group. Returns (B, S, k) int32."""
+    B, S, k = idx.shape
+    onehot = jax.nn.one_hot(idx.reshape(B, S * k), n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - onehot            # exclusive
+    sel = jnp.take_along_axis(pos, idx.reshape(B, S * k, 1), axis=-1)
+    return sel.reshape(B, S, k)
+
+
+def _experts_apply(params, expert_in: jax.Array, cfg: ModelConfig
+                   ) -> jax.Array:
+    """expert_in: (E, B, C, d) → (E, B, C, d) through per-expert SwiGLU."""
+    gw = cfg.gather_weights
+    wi = gathered(params["wi"], "expert", None, None, gather=gw)
+    wg = gathered(params["wg"], "expert", None, None, gather=gw)
+    wo = gathered(params["wo"], "expert", None, None, gather=gw)
+    h = jnp.einsum("ebcd,edf->ebcf", expert_in, wi.astype(cfg.dtype))
+    g = jnp.einsum("ebcd,edf->ebcf", expert_in, wg.astype(cfg.dtype))
+    h = jax.nn.silu(g) * h
+    h = constrain(h, "expert", "batch", None, None)
+    return jnp.einsum("ebcf,efd->ebcd", h, wo.astype(cfg.dtype))
+
+
+def moe_block(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    m = cfg.moe
+    B, S, d = x.shape
+    gate, idx = _route(params, x, cfg)
+    C = expert_capacity(cfg, S)
+    pos = _positions_in_expert(idx, m.n_experts)         # (B,S,k)
+    keep = (pos < C)
+    gate = (gate * keep).astype(cfg.dtype)
+
+    if m.dispatch == "einsum":
+        onehot_e = jax.nn.one_hot(idx, m.n_experts, dtype=cfg.dtype)
+        onehot_c = jax.nn.one_hot(pos, C, dtype=cfg.dtype) \
+            * keep[..., None].astype(cfg.dtype)
+        # (B,S,k,E) × (B,S,k,C) → dispatch (B,S,E,C); combine adds gates
+        dispatch = jnp.einsum("bske,bskc->bsec", onehot_e, onehot_c)
+        dispatch = constrain(dispatch, "batch", None, "expert", None)
+        combine = jnp.einsum("bske,bskc,bsk->bsec", onehot_e, onehot_c, gate)
+        combine = constrain(combine, "batch", None, "expert", None)
+        expert_in = jnp.einsum("bsec,bsd->ebcd", dispatch, x)
+        expert_in = constrain(expert_in, "expert", "batch", None, None)
+        out = _experts_apply(params, expert_in, cfg)
+        y = jnp.einsum("bsec,ebcd->bsd", combine, out)
+    else:  # "scatter": same (E,C) buffer, built by indexing — no matmul FLOPs
+        slot = idx * C + pos                              # (B,S,k)
+        slot = jnp.where(keep, slot, m.n_experts * C)     # overflow → trash row
+        buf = jnp.zeros((B, m.n_experts * C + 1, d), cfg.dtype)
+        flat_slot = slot.reshape(B, S * m.top_k)
+        src = jnp.repeat(x, m.top_k, axis=1)              # (B, S·k, d)
+        buf = buf.at[jnp.arange(B)[:, None], flat_slot].set(src)
+        expert_in = buf[:, :-1].reshape(B, m.n_experts, C, d)
+        expert_in = constrain(expert_in.transpose(1, 0, 2, 3),
+                              "expert", "batch", None, None)
+        out = _experts_apply(params, expert_in, cfg)      # (E,B,C,d)
+        out_flat = out.transpose(1, 0, 2, 3).reshape(B, m.n_experts * C, d)
+        out_flat = jnp.concatenate(
+            [out_flat, jnp.zeros((B, 1, d), cfg.dtype)], axis=1)
+        picked = jnp.take_along_axis(
+            out_flat, flat_slot[..., None], axis=1)       # (B, S·k, d)
+        y = jnp.einsum("bskd,bsk->bsd",
+                       picked.reshape(B, S, m.top_k, d), gate)
+    y = constrain(y, "batch", None, None)
+    if m.shared_d_ff:
+        y = y + mlp(params["shared"], x, cfg.gather_weights)
+    return y

@@ -1,0 +1,193 @@
+"""Mamba-2 (SSD) block: projections, causal depthwise conv, SSD scan,
+gated RMSNorm, plus the single-token decode recurrence.
+
+Depthwise conv over the concatenated [x|B|C] streams is implemented as
+*separate* per-stream depthwise convs (mathematically identical, since
+depthwise = per-channel), which keeps TP sharding clean: the x-stream
+channels shard over the model axis, the small B/C streams stay replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import _init_dense, gathered
+from repro.sharding import constrain
+
+
+def init_ssm(key, cfg: ModelConfig) -> Dict[str, Any]:
+    s = cfg.ssm
+    d, di = cfg.d_model, cfg.ssm_inner
+    H, P, N, G, W = cfg.ssm_heads, s.head_dim, s.state_dim, s.n_groups, s.conv_width
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[6], (H,))
+                 * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return {
+        "wz": _init_dense(ks[0], (d, di), cfg.param_dtype),
+        "wx": _init_dense(ks[1], (d, di), cfg.param_dtype),
+        "wB": _init_dense(ks[2], (d, G * N), cfg.param_dtype),
+        "wC": _init_dense(ks[3], (d, G * N), cfg.param_dtype),
+        "wdt": _init_dense(ks[4], (d, H), cfg.param_dtype),
+        "conv_x": (jax.random.normal(ks[5], (W, di)) * 0.1).astype(cfg.param_dtype),
+        "conv_B": (jax.random.normal(ks[7], (W, G * N)) * 0.1).astype(cfg.param_dtype),
+        "conv_C": (jax.random.normal(jax.random.fold_in(key, 9), (W, G * N))
+                   * 0.1).astype(cfg.param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "wo": _init_dense(jax.random.fold_in(key, 10), (di, d), cfg.param_dtype),
+    }
+
+
+def ssm_specs() -> Dict[str, Any]:
+    return {
+        "wz": ("fsdp", "tp"), "wx": ("fsdp", "tp"),
+        "wB": ("fsdp", None), "wC": ("fsdp", None), "wdt": ("fsdp", "tp"),
+        "conv_x": (None, "tp"), "conv_B": (None, None), "conv_C": (None, None),
+        "A_log": ("tp",), "D": ("tp",), "dt_bias": ("tp",),
+        "norm_scale": ("tp",), "wo": ("tp", "fsdp"),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, T, C); w: (W, C) — causal depthwise conv along T."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],                  # (W, 1, C)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                   eps: float) -> jax.Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * (var + eps) ** -0.5 * scale).astype(y.dtype)
+
+
+def ssm_block(params, x: jax.Array, cfg: ModelConfig,
+              return_state: bool = False):
+    """Full-sequence SSD forward (train; prefill with ``return_state``)."""
+    from repro.kernels.ssd_scan import ops as ssd_ops
+    from repro.kernels.ssd_scan import ref as ssd_ref
+    s = cfg.ssm
+    B, T, _ = x.shape
+    H, P, N, G = cfg.ssm_heads, s.head_dim, s.state_dim, s.n_groups
+    gw = cfg.gather_weights
+    z = jnp.einsum("btd,de->bte", x,
+                   gathered(params["wz"], None, "tp", gather=gw).astype(cfg.dtype))
+    xs_raw = jnp.einsum("btd,de->bte", x,
+                        gathered(params["wx"], None, "tp", gather=gw).astype(cfg.dtype))
+    Bs_raw = jnp.einsum("btd,de->bte", x,
+                        gathered(params["wB"], None, None, gather=gw).astype(cfg.dtype))
+    Cs_raw = jnp.einsum("btd,de->bte", x,
+                        gathered(params["wC"], None, None, gather=gw).astype(cfg.dtype))
+    dt = jnp.einsum("btd,dh->bth", x,
+                    gathered(params["wdt"], None, "tp", gather=gw).astype(cfg.dtype))
+    xs = jax.nn.silu(_causal_depthwise_conv(xs_raw, params["conv_x"].astype(cfg.dtype)))
+    Bs = jax.nn.silu(_causal_depthwise_conv(Bs_raw, params["conv_B"].astype(cfg.dtype)))
+    Cs = jax.nn.silu(_causal_depthwise_conv(Cs_raw, params["conv_C"].astype(cfg.dtype)))
+    xs = constrain(xs, "batch", None, "tp")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    chunk = min(s.chunk_size, T)
+    while T % chunk:
+        chunk -= 1
+    args = (xs.reshape(B, T, H, P), dt, A,
+            Bs.reshape(B, T, G, N), Cs.reshape(B, T, G, N), params["D"])
+    if return_state:
+        y, final = ssd_ref.ssd_chunked(*args, chunk=chunk)
+    else:
+        y = ssd_ops.ssd_scan(*args, chunk=chunk, impl=cfg.attn_impl)
+    y = _gated_rmsnorm(y.reshape(B, T, -1), z, params["norm_scale"], cfg.norm_eps)
+    y = constrain(y, "batch", None, "tp")
+    out = jnp.einsum("bte,ed->btd", y,
+                     gathered(params["wo"], "tp", None,
+                              gather=cfg.gather_weights).astype(cfg.dtype))
+    if not return_state:
+        return out
+    W = s.conv_width
+    state = {
+        "ssm": final,
+        "conv_x": xs_raw[:, T - (W - 1):, :],
+        "conv_B": Bs_raw[:, T - (W - 1):, :],
+        "conv_C": Cs_raw[:, T - (W - 1):, :],
+    }
+    return out, state
+
+
+# --------------------------------------------------------------- decode path
+def init_ssm_state(cfg: ModelConfig, batch: int,
+                   n_layers: Optional[int] = None) -> Dict[str, Any]:
+    s = cfg.ssm
+    H, P, N, G, W = cfg.ssm_heads, s.head_dim, s.state_dim, s.n_groups, s.conv_width
+    di = cfg.ssm_inner
+
+    def shp(*dims):
+        return ((n_layers,) if n_layers else ()) + tuple(dims)
+
+    return {
+        "ssm": jnp.zeros(shp(batch, H, P, N), jnp.float32),
+        "conv_x": jnp.zeros(shp(batch, W - 1, di), cfg.dtype),
+        "conv_B": jnp.zeros(shp(batch, W - 1, G * N), cfg.dtype),
+        "conv_C": jnp.zeros(shp(batch, W - 1, G * N), cfg.dtype),
+    }
+
+
+def ssm_state_specs(layer_stacked: bool) -> Dict[str, Any]:
+    lead = (None,) if layer_stacked else ()
+    return {
+        "ssm": lead + ("batch", "tp", None, None),
+        "conv_x": lead + ("batch", None, "tp"),
+        "conv_B": lead + ("batch", None, None),
+        "conv_C": lead + ("batch", None, None),
+    }
+
+
+def _conv_step(state: jax.Array, xt: jax.Array, w: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """state (B, W-1, C), xt (B, C) → (conv output (B, C), new state)."""
+    full = jnp.concatenate([state, xt[:, None, :]], axis=1)   # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", full, w)
+    return out, full[:, 1:, :]
+
+
+def ssm_decode_step(params, x: jax.Array, cfg: ModelConfig,
+                    state: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
+    """x: (B, 1, d) → (B, 1, d); constant-size state update (the long_500k
+    decode path — no KV growth, the whole point of SSM serving)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    H, P, N, G = cfg.ssm_heads, s.head_dim, s.state_dim, s.n_groups
+    xt = x[:, 0, :]
+    z = xt @ params["wz"].astype(cfg.dtype)
+    xs = xt @ params["wx"].astype(cfg.dtype)
+    Bs = xt @ params["wB"].astype(cfg.dtype)
+    Cs = xt @ params["wC"].astype(cfg.dtype)
+    dt = xt @ params["wdt"].astype(cfg.dtype)
+    xs, cx = _conv_step(state["conv_x"], xs, params["conv_x"].astype(cfg.dtype))
+    Bs, cB = _conv_step(state["conv_B"], Bs, params["conv_B"].astype(cfg.dtype))
+    Cs, cC = _conv_step(state["conv_C"], Cs, params["conv_C"].astype(cfg.dtype))
+    xs, Bs, Cs = jax.nn.silu(xs), jax.nn.silu(Bs), jax.nn.silu(Cs)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,H)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    Bh = jnp.repeat(Bs.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cs.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                            # (B,H)
+    new_state = state["ssm"] * decay[..., None, None] \
+        + jnp.einsum("bh,bhp,bhn->bhpn", dt, xh, Bh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state) \
+        + xh * params["D"][None, :, None]
+    y = _gated_rmsnorm(y.reshape(B, -1).astype(cfg.dtype), z,
+                       params["norm_scale"], cfg.norm_eps)
+    out = (y @ params["wo"].astype(cfg.dtype))[:, None, :]
+    return out, {"ssm": new_state, "conv_x": cx, "conv_B": cB, "conv_C": cC}

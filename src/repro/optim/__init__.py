@@ -1,0 +1,11 @@
+from repro.optim.adamw import (adamw_init, adamw_update, opt_state_specs,
+                               OptConfig)
+from repro.optim.schedules import warmup_cosine, constant
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compress import (compressed_psum_mean, CompressionState,
+                                  init_compression_state)
+
+__all__ = ["adamw_init", "adamw_update", "opt_state_specs", "OptConfig",
+           "warmup_cosine", "constant", "clip_by_global_norm", "global_norm",
+           "compressed_psum_mean", "CompressionState",
+           "init_compression_state"]

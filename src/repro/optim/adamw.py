@@ -1,0 +1,64 @@
+"""AdamW with FSDP-sharded state (m, v stored like the weights).
+
+``state_dtype`` trades optimizer-memory for fidelity: fp32 default; the
+405B config drops to bf16 state so a single pod remains within reach
+(memory accounting reported per-cell in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32
+
+
+def adamw_init(params, opt_cfg: OptConfig) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, opt_cfg.state_dtype)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_spec_tree) -> Dict[str, Any]:
+    """m and v shard exactly like the weights; count is replicated."""
+    return {"m": param_spec_tree, "v": param_spec_tree, "count": ()}
+
+
+def adamw_update(grads, opt_state, params, lr, opt_cfg: OptConfig):
+    count = opt_state["count"] + 1
+    b1, b2 = opt_cfg.b1, opt_cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        vf = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        step = (mf / c1) / (jnp.sqrt(vf / c2) + opt_cfg.eps)
+        step = step + opt_cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "count": count}

@@ -1,0 +1,153 @@
+"""HLO post-partitioning analysis: collective bytes + roofline terms.
+
+``collective_bytes`` parses the compiled (per-device SPMD) module text and
+sums *operand* bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, via a name→shape symbol table built from
+the instruction definitions (cost_analysis does not expose collectives).
+
+Hardware model (assignment constants, TPU v5e):
+    197 TFLOP/s bf16 · chip⁻¹ ;  819 GB/s HBM ;  ~50 GB/s/link ICI.
+
+Terms are computed from per-device quantities of the partitioned module
+(cost_analysis FLOPs/bytes are per-device; collective operand bytes are the
+per-device payload — ring algorithms move ≈ (n−1)/n of it per link, which
+this model rounds to 1).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every dtype[dims] occurrence in a type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: op count + summed operand bytes (per device)."""
+    # symbol table: instruction name -> bytes of its (tuple) result type
+    sym: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # result type = everything before the opcode token; cheapest robust
+        # approach: bytes of all shapes appearing before the first '(' that
+        # follows the opcode — instead take shapes in the segment before
+        # the opcode word.
+        sym[name] = _shape_bytes(rhs.split("(", 1)[0])
+    out = {k: {"count": 0, "bytes": 0.0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        _, rhs = m.groups()
+        opcode_m = re.match(r"(?:\([^=]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+                            r"([a-z0-9\-]+)", rhs)
+        if not opcode_m:
+            continue
+        opcode = opcode_m.group(1)
+        kind = next((k for k in COLLECTIVES
+                     if opcode == k or opcode.startswith(k + ".")), None)
+        if kind is None:
+            continue
+        # operand list: first (...) after the opcode
+        tail = rhs.split(opcode, 1)[1]
+        paren = tail.find("(")
+        if paren < 0:
+            continue
+        depth, j = 0, paren
+        for j in range(paren, len(tail)):
+            if tail[j] == "(":
+                depth += 1
+            elif tail[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operands = tail[paren + 1:j]
+        total = 0
+        for opnd in operands.split(","):
+            opnd = opnd.strip().lstrip("%")
+            opnd = opnd.split(" ")[0]
+            if opnd in sym:
+                total += sym[opnd]
+            else:
+                total += _shape_bytes(opnd)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += float(total)
+    return out
+
+
+def opcode_bytes_histogram(hlo_text: str, top: int = 14) -> Dict[str, Dict]:
+    """Output bytes + op counts per opcode — the dry-run 'profile' that
+    drives §Perf hypotheses (no wall-clock exists on this container)."""
+    hist: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        _, rhs = m.groups()
+        opcode_m = re.match(r"(?:\([^=]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+                            r"([a-z0-9\-]+)", rhs)
+        if not opcode_m:
+            continue
+        opcode = opcode_m.group(1).split(".")[0]
+        nbytes = _shape_bytes(rhs.split("(", 1)[0])
+        rec = hist.setdefault(opcode, {"count": 0, "out_bytes": 0.0})
+        rec["count"] += 1
+        rec["out_bytes"] += nbytes
+    ranked = sorted(hist.items(), key=lambda kv: -kv[1]["out_bytes"])
+    return dict(ranked[:top])
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float, chips: int) -> Dict[str, float]:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = coll_bytes_per_device / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s,
+             "flops_global": flops_per_device * chips,
+             "bytes_global": bytes_per_device * chips,
+             "coll_bytes_global": coll_bytes_per_device * chips}
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["dominant"] = dom
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["roofline_fraction"] = (terms["compute_s"] / bound) if bound else 0.0
+    return terms
+
+
+def model_flops(cfg, shape_kind: str, tokens: int) -> float:
+    """6·N·D (train) / 2·N_active·D (inference fwd) per assignment."""
+    n_active = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens

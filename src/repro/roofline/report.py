@@ -1,0 +1,150 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from sweep JSONs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+
+def load_results(results_dir: str) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def _fmt_s(v: Optional[float]) -> str:
+    if v is None:
+        return "—"
+    if v >= 1.0:
+        return f"{v:.2f}s"
+    if v >= 1e-3:
+        return f"{v * 1e3:.1f}ms"
+    return f"{v * 1e6:.0f}µs"
+
+
+def _fmt_n(v: Optional[float]) -> str:
+    if v is None:
+        return "—"
+    for unit, scale in (("P", 1e15), ("T", 1e12), ("G", 1e9), ("M", 1e6)):
+        if abs(v) >= scale:
+            return f"{v / scale:.2f}{unit}"
+    return f"{v:.0f}"
+
+
+FIX_HINTS = {
+    ("memory_s", "train"): "cut activation traffic: fused/chunked attention "
+                           "(no (S,S) scores in HBM), bf16 master/opt state",
+    ("memory_s", "decode"): "KV-cache layout (no transposes), quantized KV, "
+                            "larger per-step batch",
+    ("memory_s", "prefill"): "chunked attention + remat-free fwd",
+    ("memory_s", "long"): "state layout; batch>1 to amortize weight reads",
+    ("compute_s", "train"): "drop one-hot dispatch FLOPs (MoE) / reduce "
+                            "remat recompute",
+    ("compute_s", "prefill"): "flash attention kernel (MXU-shaped tiles)",
+    ("collective_s", "train"): "reduce-scatter grad sync instead of "
+                               "all-reduce; overlap via microbatch scan",
+    ("collective_s", "decode"): "shrink per-layer all-gathers (act_heads "
+                                "layout)",
+    ("collective_s", "prefill"): "same",
+    ("collective_s", "long"): "sequence-parallel state partitioning",
+}
+
+
+def roofline_table(results: List[Dict]) -> str:
+    rows = [
+        "| arch | shape | status | compute | memory | collective | dominant "
+        "| roofline frac | MODEL/HLO flops | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|".replace("|---|---|---|---"
+                                                             "|---|---|---|---"
+                                                             "|---|---|",
+                                                             "|---|---|---|---"
+                                                             "|---|---|---|---"
+                                                             "|---|"),
+    ]
+    for r in results:
+        if r.get("multi_pod") or not r.get("exact"):
+            continue
+        arch, shape = r["arch"], r["shape"]
+        if r["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | skip: {r['reason'][:40]}… "
+                        f"| — | — | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | {r['status']} "
+                        f"| — | — | — | — | — | — | — |")
+            continue
+        t = r["roofline"]
+        mem = r["memory"]
+        rows.append(
+            f"| {arch} | {shape} | ok | {_fmt_s(t['compute_s'])} "
+            f"| {_fmt_s(t['memory_s'])} | {_fmt_s(t['collective_s'])} "
+            f"| {t['dominant'].replace('_s', '')} "
+            f"| {t['roofline_fraction']:.3f} "
+            f"| {t['useful_flops_ratio']:.2f} "
+            f"| {'✓' if mem['fits_16g_hbm'] else '✗'} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(results: List[Dict]) -> str:
+    rows = [
+        "| arch | shape | mesh | status | compile | args/dev | temp/dev "
+        "| collectives (count) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        mesh = "2×16×16" if r.get("multi_pod") else "16×16"
+        arch, shape = r["arch"], r["shape"]
+        if r["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | {mesh} | skipped (documented) "
+                        f"| — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | {mesh} | {r['status']} "
+                        f"| — | — | — | — |")
+            continue
+        mem = r["memory"]
+        colls = r.get("collectives", {})
+        cstr = " ".join(f"{k.split('-')[-1][:4]}:{int(v['count'])}"
+                        for k, v in colls.items() if v["count"])
+        rows.append(
+            f"| {arch} | {shape} | {mesh} | ok | {r['compile_s']}s "
+            f"| {_fmt_n(mem['argument_bytes_per_device'])}B "
+            f"| {_fmt_n(mem['temp_bytes_per_device'])}B | {cstr} |")
+    return "\n".join(rows)
+
+
+def bottleneck_notes(results: List[Dict]) -> str:
+    lines = []
+    from repro.launch.shapes import SHAPES
+    for r in results:
+        if r.get("multi_pod") or not r.get("exact") or r["status"] != "ok":
+            continue
+        kind = SHAPES[r["shape"]].kind
+        dom = r["roofline"]["dominant"]
+        hint = FIX_HINTS.get((dom, kind), "—")
+        lines.append(f"- **{r['arch']} × {r['shape']}** — bottleneck "
+                     f"{dom.replace('_s', '')}: {hint}.")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--section", choices=["roofline", "dryrun", "notes"],
+                    default="roofline")
+    args = ap.parse_args()
+    results = load_results(args.results)
+    if args.section == "roofline":
+        print(roofline_table(results))
+    elif args.section == "dryrun":
+        print(dryrun_table(results))
+    else:
+        print(bottleneck_notes(results))
+
+
+if __name__ == "__main__":
+    main()

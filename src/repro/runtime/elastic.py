@@ -1,0 +1,66 @@
+"""Elastic scaling: shrink/regrow the mesh and re-shard state.
+
+At 1000+ nodes the failure model is "a pod (or slice) drops out"; recovery
+is: detect (heartbeat) → rebuild the mesh on the surviving device set →
+restore the latest committed checkpoint re-sharded onto the new mesh →
+resume. ``reshard_state`` also serves planned elastic *expansion* (new pod
+joins): the same checkpoint restores onto the larger mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding import specs_to_shardings
+
+
+def build_mesh(devices: Sequence, shape: Tuple[int, ...],
+               axes: Tuple[str, ...]) -> Mesh:
+    n = int(np.prod(shape))
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def shrink_after_failure(devices: Sequence, shape: Tuple[int, ...],
+                         axes: Tuple[str, ...],
+                         failed: Sequence) -> Tuple[Mesh, Tuple[int, ...]]:
+    """Drop the outermost-axis slices containing failed devices and rebuild.
+
+    The outermost axis is the scale-out axis ("pod" on the production mesh):
+    losing any device in a pod evicts that pod — the TPU failure domain.
+    """
+    failed_ids = {id(d) for d in failed} | {getattr(d, "id", None)
+                                            for d in failed}
+    arr = np.asarray(devices[:int(np.prod(shape))]).reshape(shape)
+    keep_slices = []
+    for i in range(shape[0]):
+        block = arr[i].ravel()
+        if any(getattr(d, "id", None) in failed_ids or id(d) in failed_ids
+               for d in block):
+            continue
+        keep_slices.append(arr[i])
+    if not keep_slices:
+        raise RuntimeError("no surviving slices")
+    new_shape = (len(keep_slices),) + tuple(shape[1:])
+    new_arr = np.stack(keep_slices)
+    return Mesh(new_arr, axes), new_shape
+
+
+def reshard_state(state: Any, spec_tree: Any, new_mesh: Mesh,
+                  rules: Optional[Dict] = None,
+                  overrides: Optional[Dict] = None) -> Any:
+    """Re-place every leaf onto the new mesh per its logical spec."""
+    shardings = specs_to_shardings(spec_tree, new_mesh, rules, overrides)
+
+    def put(x, s):
+        if s is None:
+            return jax.device_put(np.asarray(x))
+        return jax.device_put(np.asarray(x), s)
+
+    return jax.tree_util.tree_map(
+        put, state, shardings)

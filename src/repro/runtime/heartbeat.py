@@ -1,0 +1,100 @@
+"""Heartbeat failure detector built on continuations.
+
+Every rank periodically sends a heartbeat message; the monitor keeps one
+pre-posted receive per rank whose *continuation* records liveness and
+re-posts itself (the paper's re-post pattern), plus a ``TimerOp``
+continuation chain that sweeps for stale ranks. Failures fire the
+registered callback exactly once per rank — the elastic controller reacts
+by shrinking the mesh (``runtime.elastic``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Set
+
+from repro.core import ANY_SOURCE, Engine, Status, TimerOp, Transport
+
+HEARTBEAT_TAG = 9101
+
+
+class HeartbeatSender:
+    """Rank-side: call ``beat()`` from the rank's main loop (cheap isend)."""
+
+    def __init__(self, transport: Transport, rank: int, monitor_rank: int,
+                 interval_s: float = 0.01) -> None:
+        self.transport = transport
+        self.rank = rank
+        self.monitor_rank = monitor_rank
+        self.interval_s = interval_s
+        self._last = 0.0
+
+    def beat(self, now: Optional[float] = None) -> None:
+        now = time.monotonic() if now is None else now
+        if now - self._last >= self.interval_s:
+            self._last = now
+            self.transport.isend(self.rank, self.monitor_rank, HEARTBEAT_TAG,
+                                 ("hb", self.rank, now))
+
+
+class HeartbeatMonitor:
+    def __init__(self, transport: Transport, engine: Engine, rank: int,
+                 watched: List[int], timeout_s: float = 0.2,
+                 sweep_interval_s: float = 0.05,
+                 on_failure: Optional[Callable[[int], None]] = None) -> None:
+        self.transport = transport
+        self.engine = engine
+        self.rank = rank
+        self.timeout_s = timeout_s
+        self.sweep_interval_s = sweep_interval_s
+        self.on_failure = on_failure or (lambda r: None)
+        self.last_seen: Dict[int, float] = {r: time.monotonic()
+                                            for r in watched}
+        self.failed: Set[int] = set()
+        self._lock = threading.Lock()
+        self._stopped = False
+        self.cr = engine.continue_init(
+            {"mpi_continue_enqueue_complete": True})
+        self._post_recv()
+        self._post_sweep()
+
+    # heartbeat receive → record → re-post (continuation body starts new op)
+    def _post_recv(self) -> None:
+        op = self.transport.irecv(self.rank, source=ANY_SOURCE,
+                                  tag=HEARTBEAT_TAG)
+        self.engine.continue_when(op, self._on_beat, status=[None],
+                                  cr=self.cr)
+
+    def _on_beat(self, statuses, _):
+        status: Status = statuses[0]
+        if status.test_cancelled() or self._stopped:
+            return
+        _, rank, _ = status.payload
+        with self._lock:
+            self.last_seen[rank] = time.monotonic()
+        self._post_recv()
+
+    # periodic sweep via timer continuations
+    def _post_sweep(self) -> None:
+        self.engine.continue_when(TimerOp(self.sweep_interval_s),
+                                  self._on_sweep, cr=self.cr)
+
+    def _on_sweep(self, statuses, _):
+        if self._stopped:
+            return
+        now = time.monotonic()
+        newly_failed = []
+        with self._lock:
+            for rank, seen in self.last_seen.items():
+                if rank not in self.failed and now - seen > self.timeout_s:
+                    self.failed.add(rank)
+                    newly_failed.append(rank)
+        for rank in newly_failed:
+            self.on_failure(rank)
+        self._post_sweep()
+
+    def progress(self) -> None:
+        self.cr.test()
+
+    def stop(self) -> None:
+        self._stopped = True

@@ -1,0 +1,64 @@
+"""Serving step factories: prefill / decode / long-context decode.
+
+``decode_32k`` and ``long_500k`` lower ``serve_step`` — one new token
+against a KV cache (or SSM state) of the shape's sequence length — NOT a
+training step (assignment note). Caches are donated by the drivers so the
+update is in-place on device.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.common import AUDIO, ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, max_cache_len: int) -> Callable:
+    """(params, batch) → (next-token logits, primed cache/state)."""
+    if cfg.family == AUDIO:
+        def prefill(params, batch):
+            # whisper prefill_32k = encoder forward over 32k frames +
+            # decoder state init (cross-KV precompute)
+            state = encdec.init_decode_state(params, batch["audio_embed"],
+                                             cfg, max_cache_len)
+            bos = jnp.zeros((batch["audio_embed"].shape[0], 1), jnp.int32)
+            logits, state = encdec.encdec_decode_step(
+                params, bos, cfg, state, jnp.zeros((), jnp.int32))
+            return logits, state
+        return prefill
+
+    def prefill(params, batch):
+        B = batch["tokens"].shape[0]
+        cache = lm.init_cache(cfg, B, max_cache_len)
+        return lm.lm_prefill(params, batch, cfg, cache)
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """(params, cache, token, pos) → (logits, new cache). One token."""
+    if cfg.family == AUDIO:
+        def decode(params, cache, token, pos):
+            return encdec.encdec_decode_step(params, token, cfg, cache, pos)
+        return decode
+
+    def decode(params, cache, token, pos):
+        return lm.lm_decode_step(params, token, cfg, cache, pos)
+    return decode
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt: jax.Array,
+                    n_tokens: int, max_cache_len: int) -> jax.Array:
+    """Greedy decoding loop (exercised by examples/serve_batch)."""
+    prefill = jax.jit(make_prefill_step(cfg, max_cache_len))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+    logits, cache = prefill(params, {"tokens": prompt})
+    pos = prompt.shape[1]
+    out = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)]
+    for i in range(n_tokens - 1):
+        logits, cache = decode(params, cache, out[-1][:, None],
+                               jnp.int32(pos + i))
+        out.append(jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32))
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,140 @@
+"""Logical-axis sharding: rules table + constraint helper.
+
+Model code annotates activations with *logical* axis names; a rules table
+maps them to mesh axes (MaxText-style). Outside a mesh context the helpers
+are no-ops, so the same model code runs in CPU smoke tests and in the
+256/512-chip dry-run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None, Tuple[Union[str, None], ...]]
+
+# Default rules: single-pod (data, model) and multi-pod (pod, data, model)
+# meshes share one table — "replica" composes pod×data when present.
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "tp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "heads": "model",
+    "act_heads": "model",
+    "seq": None,          # overridden to ("pod", "data") for long-context SP
+    "kv_seq": None,
+    "chunk": None,
+    "state": None,
+}
+
+_CTX = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Dict[str, Any]]]:
+    return getattr(_CTX, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: Optional[Dict[str, Any]] = None,
+                 overrides: Optional[Dict[str, Any]] = None):
+    """Activate a mesh + logical rules for model code in this thread."""
+    if mesh is None:
+        yield
+        return
+    table = dict(DEFAULT_RULES if rules is None else rules)
+    if overrides:
+        table.update(overrides)
+    # drop mesh axes that don't exist (e.g. "pod" on the single-pod mesh)
+    names = set(mesh.axis_names)
+
+    def resolve(v):
+        if v is None:
+            return None
+        if isinstance(v, tuple):
+            kept = tuple(a for a in v if a in names)
+            return kept if kept else None
+        return v if v in names else None
+
+    table = {k: resolve(v) for k, v in table.items()}
+    prev = _current()
+    _CTX.ctx = (mesh, table)
+    try:
+        yield
+    finally:
+        _CTX.ctx = prev
+
+
+def logical_to_spec(axes: Sequence[Logical],
+                    table: Optional[Dict[str, Any]] = None) -> P:
+    """Map logical axis names to a PartitionSpec using the active rules."""
+    if table is None:
+        ctx = _current()
+        if ctx is None:
+            return P()
+        table = ctx[1]
+    spec = []
+    used: set = set()
+
+    def lookup(name):
+        if name is None:
+            return None
+        v = table.get(name, None)
+        return v
+
+    for ax in axes:
+        if isinstance(ax, tuple):
+            parts = []
+            for a in ax:
+                v = lookup(a)
+                if v is None:
+                    continue
+                parts.extend(v if isinstance(v, tuple) else (v,))
+            parts = [p for p in parts if p not in used]
+            used.update(parts)
+            spec.append(tuple(parts) if parts else None)
+        else:
+            v = lookup(ax)
+            if isinstance(v, tuple):
+                v = tuple(p for p in v if p not in used)
+                used.update(v)
+                spec.append(v if v else None)
+            else:
+                if v in used:
+                    v = None
+                if v is not None:
+                    used.add(v)
+                spec.append(v)
+    return P(*spec)
+
+
+def constrain(x: jax.Array, *axes: Logical) -> jax.Array:
+    """``with_sharding_constraint`` by logical names; no-op without a mesh."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, table = ctx
+    spec = logical_to_spec(axes, table)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(axes: Sequence[Logical]) -> Optional[NamedSharding]:
+    ctx = _current()
+    if ctx is None:
+        return None
+    mesh, table = ctx
+    return NamedSharding(mesh, logical_to_spec(axes, table))
+
+
+def specs_to_shardings(spec_tree: Any, mesh: Mesh,
+                       rules: Optional[Dict[str, Any]] = None,
+                       overrides: Optional[Dict[str, Any]] = None) -> Any:
+    """Convert a pytree of logical-axis tuples into NamedShardings."""
+    with use_sharding(mesh, rules, overrides):
+        return jax.tree_util.tree_map(
+            lambda axes: named_sharding(axes), spec_tree,
+            is_leaf=lambda v: isinstance(v, tuple) or v is None)

@@ -1,0 +1,103 @@
+"""Train-step factory: microbatched gradient accumulation + AdamW.
+
+The global batch is reshaped to (n_microbatches, mb, ...) and scanned;
+fp32 gradient accumulators are sharded like the weights (FSDP), so the
+per-microbatch reduce-scatters overlap the next microbatch's backward under
+XLA's scheduler — the device-plane realization of the paper's
+"no idle waiting on completion" objective (DESIGN.md §2b).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.common import AUDIO, ModelConfig
+from repro.optim import (OptConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, opt_state_specs, warmup_cosine)
+from repro.sharding import constrain
+
+
+def default_loss_fn(cfg: ModelConfig) -> Callable:
+    if cfg.family == AUDIO:
+        return lambda p, b: encdec.encdec_loss(p, b, cfg)
+    return lambda p, b: lm.lm_loss(p, b, cfg)
+
+
+def init_train_state(key, cfg: ModelConfig, opt_cfg: OptConfig) -> Dict[str, Any]:
+    init_fn = encdec.init_params if cfg.family == AUDIO else lm.init_params
+    params = init_fn(key, cfg)
+    return {"params": params, "opt": adamw_init(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs_fn = encdec.param_specs if cfg.family == AUDIO else lm.param_specs
+    pspecs = specs_fn(cfg)
+    return {"params": pspecs, "opt": opt_state_specs(pspecs), "step": ()}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *,
+                    num_microbatches: int = 1,
+                    lr_schedule: Optional[Callable] = None,
+                    loss_fn: Optional[Callable] = None,
+                    grad_spec_tree: Any = None) -> Callable:
+    """``grad_spec_tree``: logical-axis tree (= param specs). When given,
+    per-microbatch gradients are constrained to the weight sharding, which
+    lets GSPMD lower the data-parallel sync as reduce-scatters fused into
+    the backward instead of full all-reduces (§Perf optimization)."""
+    loss_fn = loss_fn or default_loss_fn(cfg)
+    lr_schedule = lr_schedule or (lambda step: jnp.float32(opt_cfg.lr))
+
+    def _constrain_grads(grads):
+        if grad_spec_tree is None:
+            return grads
+        from repro.sharding import constrain
+        return jax.tree_util.tree_map(
+            lambda axes, g: constrain(g, *axes),
+            grad_spec_tree, grads,
+            is_leaf=lambda v: isinstance(v, tuple))
+
+    def grads_of(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        return loss, _constrain_grads(grads)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if num_microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split_mb(x):
+                x = x.reshape((num_microbatches, -1) + x.shape[1:])
+                return constrain(x, None, "batch", *([None] * (x.ndim - 2)))
+
+            mbs = jax.tree_util.tree_map(split_mb, batch)
+
+            def body(acc, mb):
+                loss_acc, grads_acc = acc
+                loss, grads = grads_of(params, mb)
+                grads_acc = jax.tree_util.tree_map(jnp.add, grads_acc, grads)
+                return (loss_acc + loss, grads_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), mbs)
+            inv = 1.0 / num_microbatches
+            loss = loss * inv
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        lr = lr_schedule(state["step"])
+        new_params, new_opt = adamw_update(grads, state["opt"], params, lr,
+                                           opt_cfg)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step

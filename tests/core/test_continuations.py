@@ -1,0 +1,437 @@
+"""Unit tests for the continuation engine (paper §2–3 semantics)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (ArrayOp, CallbackError, ConcurrentCompletionError,
+                        CRState, Engine, HostTaskOp, PredicateOp, Status,
+                        TimerOp, make_info)
+from repro.core.completable import Completable
+from repro.core.status import OpState
+
+
+class ManualOp(Completable):
+    """Test op completed explicitly (push) or via an external flag (poll)."""
+
+    def __init__(self, push: bool = True):
+        super().__init__()
+        self._push = push
+        self.flag = False
+
+    @property
+    def supports_push(self):
+        return self._push
+
+    def trigger(self, status: Status = None):
+        if self._push:
+            self._complete(status or Status())
+        else:
+            self.flag = True
+
+    def _poll(self):
+        return self.flag
+
+
+@pytest.fixture
+def engine():
+    eng = Engine()
+    yield eng
+    eng.shutdown()
+
+
+# ---------------------------------------------------------------- basics
+def test_callback_runs_on_completion(engine):
+    cr = engine.continue_init()
+    op = ManualOp()
+    seen = []
+    flag = engine.continue_when(op, lambda st, d: seen.append(d), "ctx", cr=cr)
+    assert flag is False
+    assert not seen
+    op.trigger()          # push discovery → inline execution
+    assert seen == ["ctx"]
+    assert cr.test() is True
+
+
+def test_immediate_completion_flag_no_callback(engine):
+    """Paper §2.2: already-complete op → flag=1, callback NOT invoked."""
+    cr = engine.continue_init()
+    op = ManualOp()
+    op.trigger()
+    seen = []
+    statuses = [None]
+    flag = engine.continue_when(op, lambda st, d: seen.append(d), "x",
+                                status=statuses, cr=cr)
+    assert flag is True
+    assert seen == []                      # caller handles immediate case
+    assert isinstance(statuses[0], Status)  # status set before return
+    assert cr.test() is True               # nothing was registered
+
+
+def test_enqueue_complete_defers_immediate(engine):
+    """Paper §3.5: enqueue_complete forces flag=0 even when already done."""
+    cr = engine.continue_init({"mpi_continue_enqueue_complete": True})
+    op = ManualOp()
+    op.trigger()
+    seen = []
+    flag = engine.continue_when(op, lambda st, d: seen.append(d), "x", cr=cr)
+    assert flag is False
+    assert cr.active_count == 1
+    cr.test()
+    assert seen == ["x"]
+
+
+def test_continue_all_fires_once_after_last(engine):
+    cr = engine.continue_init()
+    ops = [ManualOp() for _ in range(5)]
+    seen = []
+    statuses = [None] * 5
+    flag = engine.continue_all(ops, lambda st, d: seen.append(list(st)), None,
+                               statuses=statuses, cr=cr)
+    assert flag is False
+    for op in ops[:-1]:
+        op.trigger()
+        assert seen == []
+    ops[-1].trigger()
+    assert len(seen) == 1
+    assert all(isinstance(s, Status) for s in seen[0])
+    assert cr.test()
+
+
+def test_statuses_written_before_callback(engine):
+    cr = engine.continue_init()
+    op = ManualOp()
+    captured = {}
+    statuses = [None]
+
+    def cb(st, d):
+        captured["status"] = st[0]
+
+    engine.continue_when(op, cb, None, status=statuses, cr=cr)
+    op.trigger(Status(source=3, tag=7, count=128))
+    assert captured["status"].source == 3
+    assert captured["status"].tag == 7
+
+
+def test_poll_mode_op_discovered_on_test(engine):
+    cr = engine.continue_init()
+    op = ManualOp(push=False)
+    seen = []
+    engine.continue_when(op, lambda st, d: seen.append(1), cr=cr)
+    op.trigger()                 # sets the poll flag only
+    assert seen == []            # nobody called into the engine yet
+    assert cr.test() is True     # test discovers + executes
+    assert seen == [1]
+
+
+def test_op_handle_consumed_on_attach(engine):
+    """Paper §2.2: only one continuation may be attached per op."""
+    cr = engine.continue_init()
+    op = ManualOp()
+    engine.continue_when(op, lambda st, d: None, cr=cr)
+    with pytest.raises(RuntimeError, match="already has a continuation"):
+        engine.continue_when(op, lambda st, d: None, cr=cr)
+
+
+# ------------------------------------------------------------ state machine
+def test_cr_state_transitions(engine):
+    cr = engine.continue_init()
+    assert cr.cr_state is CRState.INACTIVE
+    op = ManualOp()
+    engine.continue_when(op, lambda st, d: None, cr=cr)
+    assert cr.cr_state is CRState.ACTIVE_REFERENCED
+    op.trigger()
+    assert cr.cr_state is CRState.ACTIVE_IDLE     # executed + deregistered
+    assert cr.test() is True
+    assert cr.cr_state is CRState.COMPLETE
+    # Complete → Active Referenced on new registration (Fig. 1)
+    op2 = ManualOp()
+    engine.continue_when(op2, lambda st, d: None, cr=cr)
+    assert cr.cr_state is CRState.ACTIVE_REFERENCED
+    op2.trigger()
+    assert cr.test() is True
+
+
+def test_free_active_cr_drains(engine):
+    cr = engine.continue_init()
+    op = ManualOp()
+    engine.continue_when(op, lambda st, d: None, cr=cr)
+    cr.free()
+    with pytest.raises(RuntimeError, match="freed"):
+        engine.continue_when(ManualOp(), lambda st, d: None, cr=cr)
+    op.trigger()                 # previously registered continuation still runs
+    assert cr.active_count == 0
+
+
+def test_cr_chaining(engine):
+    """Paper §3.2: a continuation attached to a CR, registered with another."""
+    cr1 = engine.continue_init()
+    cr2 = engine.continue_init()
+    order = []
+    ops = [ManualOp() for _ in range(3)]
+    for i, op in enumerate(ops):
+        engine.continue_when(op, lambda st, d: order.append(d), i, cr=cr1)
+    flag = engine.continue_when(cr1, lambda st, d: order.append("chain"),
+                                cr=cr2)
+    assert flag is False
+    for op in ops:
+        op.trigger()
+    assert order[-1] == "chain"
+    assert set(order[:-1]) == {0, 1, 2}
+    assert cr2.test()
+
+
+# ----------------------------------------------------------------- info keys
+def test_poll_only_runs_only_in_test(engine):
+    cr = engine.continue_init({"mpi_continue_poll_only": True})
+    op = ManualOp()
+    seen = []
+    engine.continue_when(op, lambda st, d: seen.append(1), cr=cr)
+    op.trigger()
+    assert seen == []            # push discovery, but poll_only defers
+    engine.tick()
+    assert seen == []            # generic progress must not run it either
+    cr.test()
+    assert seen == [1]
+
+
+def test_max_poll_bounds_executions(engine):
+    cr = engine.continue_init({"mpi_continue_poll_only": True,
+                               "mpi_continue_max_poll": 2})
+    ops = [ManualOp() for _ in range(5)]
+    seen = []
+    for op in ops:
+        engine.continue_when(op, lambda st, d: seen.append(1), cr=cr)
+        op.trigger()
+    assert cr.test() is False
+    assert len(seen) == 2
+    assert cr.test() is False
+    assert len(seen) == 4
+    assert cr.test() is True
+    assert len(seen) == 5
+
+
+def test_poll_only_max_poll_zero_is_erroneous():
+    with pytest.raises(ValueError, match="erroneous"):
+        make_info({"mpi_continue_poll_only": True, "mpi_continue_max_poll": 0})
+
+
+def test_unknown_info_key_rejected():
+    with pytest.raises(KeyError):
+        make_info({"mpi_continue_bogus": 1})
+
+
+def test_thread_any_allows_internal_execution():
+    eng = Engine(progress_thread=True, progress_interval=1e-4)
+    try:
+        cr = eng.continue_init({"mpi_continue_thread": "any"})
+        op = ManualOp(push=False)
+        seen = threading.Event()
+        eng.continue_when(op, lambda st, d: seen.set(), cr=cr)
+        op.trigger()
+        # no application thread calls into the engine; the internal progress
+        # thread must discover AND execute.
+        assert seen.wait(timeout=2.0)
+    finally:
+        eng.shutdown()
+
+
+def test_thread_application_blocks_internal_execution():
+    eng = Engine(progress_thread=True, progress_interval=1e-4)
+    try:
+        cr = eng.continue_init()  # default thread=application
+        op = ManualOp(push=False)
+        seen = []
+        eng.continue_when(op, lambda st, d: seen.append(1), cr=cr)
+        op.trigger()
+        time.sleep(0.05)          # progress thread discovers, must not execute
+        assert seen == []
+        cr.test()                 # application thread executes
+        assert seen == [1]
+    finally:
+        eng.shutdown()
+
+
+# -------------------------------------------------------------- cancellation
+def test_cancelled_op_status_observed(engine):
+    """Paper Listing 4: callbacks must see cancellation via the status."""
+    cr = engine.continue_init()
+    op = ManualOp()
+    seen = {}
+    statuses = [None]
+    engine.continue_when(op, lambda st, d: seen.update(c=st[0].test_cancelled()),
+                         status=statuses, cr=cr)
+    op.cancel()
+    assert seen == {"c": True}
+    assert cr.test()
+
+
+# ------------------------------------------------------------- thread safety
+def test_concurrent_registration_many_threads(engine):
+    cr = engine.continue_init()
+    n_threads, per_thread = 8, 50
+    done = []
+    lock = threading.Lock()
+
+    def cb(st, d):
+        with lock:
+            done.append(d)
+
+    def worker(base):
+        for i in range(per_thread):
+            op = ManualOp()
+            engine.continue_when(op, cb, base + i, cr=cr)
+            op.trigger()
+
+    threads = [threading.Thread(target=worker, args=(t * per_thread,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert cr.wait(timeout=5.0)
+    assert sorted(done) == list(range(n_threads * per_thread))
+
+
+def test_single_tester_enforced(engine):
+    cr = engine.continue_init()
+    op = ManualOp(push=False)     # poll path: callback runs inside cr.test()
+    release = threading.Event()
+    entered = threading.Event()
+
+    def slow_cb(st, d):
+        entered.set()
+        release.wait(timeout=5.0)
+
+    engine.continue_when(op, slow_cb, cr=cr)
+    op.trigger()                  # sets the poll flag only
+    t1 = threading.Thread(target=cr.test)
+    t1.start()
+    assert entered.wait(timeout=5.0)
+    with pytest.raises(ConcurrentCompletionError):
+        cr.test()                 # second tester while t1 is inside test()
+    release.set()
+    t1.join()
+
+
+def test_no_nested_callback_execution(engine):
+    """Paper §3.1: callbacks triggered inside a callback are deferred."""
+    cr = engine.continue_init()
+    order = []
+    op2 = ManualOp()
+
+    def inner(st, d):
+        order.append("inner")
+
+    def outer(st, d):
+        order.append("outer-begin")
+        op2.trigger()      # completes op2 while inside a callback
+        order.append("outer-end")   # inner must NOT have run in between
+
+    op1 = ManualOp()
+    engine.continue_when(op1, outer, cr=cr)
+    engine.continue_when(op2, inner, cr=cr)
+    op1.trigger()
+    assert order[:2] == ["outer-begin", "outer-end"]
+    cr.wait(timeout=2.0)
+    assert order == ["outer-begin", "outer-end", "inner"]
+
+
+# ----------------------------------------------------------------- op types
+def test_host_task_op(engine):
+    from concurrent.futures import ThreadPoolExecutor
+    cr = engine.continue_init()
+    seen = []
+    gate = threading.Event()
+
+    def work():
+        gate.wait(timeout=5.0)
+        return 42
+
+    with ThreadPoolExecutor(1) as pool:
+        op = HostTaskOp(pool.submit(work))
+        flag = engine.continue_when(op, lambda st, d: seen.append(st[0].payload),
+                                    status=[None], cr=cr)
+        assert flag is False
+        gate.set()
+        assert cr.wait(timeout=5.0)
+    assert seen == [42]
+
+
+def test_host_task_op_error_surfaces(engine):
+    from concurrent.futures import ThreadPoolExecutor
+
+    def boom():
+        raise ValueError("io failed")
+
+    cr = engine.continue_init()
+    seen = []
+    statuses = [None]
+    with ThreadPoolExecutor(1) as pool:
+        op = HostTaskOp(pool.submit(boom))
+        flag = engine.continue_when(op, lambda st, d: seen.append(st[0].error),
+                                    status=statuses, cr=cr)
+        assert cr.wait(timeout=5.0)
+    if flag:   # completed before registration: status written at return
+        assert isinstance(statuses[0].error, ValueError)
+    else:
+        assert isinstance(seen[0], ValueError)
+
+
+def test_array_op(engine):
+    import jax.numpy as jnp
+    cr = engine.continue_init()
+    x = jnp.ones((8, 8)) * 2
+    seen = []
+    flag = engine.continue_when(ArrayOp(x), lambda st, d: seen.append(1), cr=cr)
+    assert cr.wait(timeout=5.0)
+    # tiny dispatch usually completes before registration → immediate flag
+    assert seen == ([] if flag else [1])
+
+
+def test_array_op_enqueue_complete_always_runs(engine):
+    """enqueue_complete removes the immediate-completion race entirely."""
+    import jax.numpy as jnp
+    cr = engine.continue_init({"mpi_continue_enqueue_complete": True})
+    x = jnp.ones((16, 16)) @ jnp.ones((16, 16))
+    seen = []
+    flag = engine.continue_when(ArrayOp(x), lambda st, d: seen.append(1), cr=cr)
+    assert flag is False
+    assert cr.wait(timeout=5.0)
+    assert seen == [1]
+
+
+def test_timer_and_predicate_ops(engine):
+    cr = engine.continue_init()
+    seen = []
+    engine.continue_when(TimerOp(0.01), lambda st, d: seen.append("t"), cr=cr)
+    box = {"v": False}
+    engine.continue_when(PredicateOp(lambda: box["v"]),
+                         lambda st, d: seen.append("p"), cr=cr)
+    time.sleep(0.02)
+    box["v"] = True
+    assert cr.wait(timeout=2.0)
+    assert sorted(seen) == ["p", "t"]
+
+
+def test_callback_error_raises_from_test(engine):
+    cr = engine.continue_init()
+    op = ManualOp()
+
+    def bad(st, d):
+        raise RuntimeError("callback exploded")
+
+    engine.continue_when(op, bad, cr=cr)
+    op.trigger()
+    with pytest.raises(CallbackError):
+        cr.test()
+    assert cr.test() is True   # errors cleared after raise
+
+
+def test_callback_error_collect_mode(engine):
+    cr = engine.continue_init({"on_error": "collect"})
+    op = ManualOp()
+    engine.continue_when(op, lambda st, d: 1 / 0, cr=cr)
+    op.trigger()
+    assert cr.test() is True
+    assert len(cr.errors) == 1

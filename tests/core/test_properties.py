@@ -1,0 +1,228 @@
+"""Hypothesis property tests on the continuation engine's invariants.
+
+Invariants (paper Fig. 1 + §2.2/§3):
+  I1  Every registered continuation executes exactly once — never lost,
+      never duplicated — for any interleaving of registration, completion
+      order, cancellation, and progress calls.
+  I2  Immediate completion (flag=True) ⇒ the callback is NEVER invoked by
+      the engine; flag=False ⇒ invoked exactly once.
+  I3  ``continue_all`` fires only after ALL its ops completed, regardless of
+      completion order; statuses are populated before the callback runs.
+  I4  CR.test() returns True ⟺ the active set is empty; the CR state is
+      COMPLETE afterwards, and can always be reactivated by registration.
+  I5  max_poll is respected: a test() executes at most max_poll callbacks
+      of that CR.
+  I6  With poll_only, callbacks run only during test()/wait() of that CR.
+"""
+import threading
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CRState, Engine, Status
+from repro.core.completable import Completable
+
+
+class ScriptOp(Completable):
+    def __init__(self, push: bool):
+        super().__init__()
+        self._push = push
+        self._flag = False
+
+    @property
+    def supports_push(self):
+        return self._push
+
+    def fire(self):
+        if self._push:
+            self._complete(Status())
+        else:
+            self._flag = True
+
+    def _poll(self):
+        return self._flag
+
+
+# Script step encodings:
+#   ("reg", group_size, push?)  register continue_all over fresh ops
+#   ("fire",)                   complete the oldest unfired op
+#   ("cancel",)                 cancel the oldest unfired op
+#   ("tick",)                   generic engine progress
+#   ("test",)                   cr.test()
+step_strategy = st.one_of(
+    st.tuples(st.just("reg"), st.integers(1, 3), st.booleans()),
+    st.tuples(st.just("fire")),
+    st.tuples(st.just("cancel")),
+    st.tuples(st.just("tick")),
+    st.tuples(st.just("test")),
+)
+
+
+def run_script(script, info=None):
+    eng = Engine()
+    cr = eng.continue_init(info or {})
+    runs = {}        # cont id -> run count
+    lock = threading.Lock()
+    unfired = []     # ops not yet fired/cancelled
+    expected = 0     # registered (flag=False) continuations
+    immediate = 0
+    test_calls = []
+
+    def make_cb(cid):
+        def cb(statuses, data):
+            with lock:
+                runs[cid] = runs.get(cid, 0) + 1
+                if statuses is not None:
+                    assert all(s_ is not None for s_ in statuses), \
+                        "status not populated before callback (I3)"
+        return cb
+
+    cid = 0
+    for stp in script:
+        kind = stp[0]
+        if kind == "reg":
+            _, size, push = stp
+            ops = [ScriptOp(push) for _ in range(size)]
+            statuses = [None] * size
+            flag = eng.continue_all(ops, make_cb(cid), None,
+                                    statuses=statuses, cr=cr)
+            if flag:
+                assert all(s_ is not None for s_ in statuses)
+            else:
+                expected += 1
+                unfired.extend(ops)
+            cid += 1
+        elif kind == "fire":
+            if unfired:
+                unfired.pop(0).fire()
+        elif kind == "cancel":
+            if unfired:
+                unfired.pop(0).cancel()
+        elif kind == "tick":
+            eng.tick()
+        elif kind == "test":
+            test_calls.append(cr.test())
+    # drain everything
+    for op in unfired:
+        op.fire()
+    assert cr.wait(timeout=10.0), "wait() did not drain the CR (I4)"
+    assert cr.test() is True
+    eng.shutdown()
+    return runs, expected, immediate
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.lists(step_strategy, max_size=30))
+def test_exactly_once_any_interleaving(script):
+    """I1 + I2: every registered continuation runs exactly once."""
+    runs, expected, _ = run_script(script)
+    assert sum(runs.values()) == expected
+    assert all(v == 1 for v in runs.values())
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(step_strategy, max_size=25))
+def test_exactly_once_poll_only(script):
+    """I1 under poll_only: still exactly-once, just deferred to test()."""
+    runs, expected, _ = run_script(script,
+                                   info={"mpi_continue_poll_only": True})
+    assert sum(runs.values()) == expected
+    assert all(v == 1 for v in runs.values())
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(step_strategy, max_size=25))
+def test_exactly_once_enqueue_complete(script):
+    """I1 under enqueue_complete: nothing is immediate, all run once."""
+    runs, expected, _ = run_script(
+        script, info={"mpi_continue_enqueue_complete": True})
+    assert sum(runs.values()) == expected
+    assert all(v == 1 for v in runs.values())
+
+
+@settings(max_examples=80, deadline=None)
+@given(order=st.permutations(list(range(5))))
+def test_continue_all_order_independent(order):
+    """I3: continue_all fires after the LAST completion, any order."""
+    eng = Engine()
+    cr = eng.continue_init()
+    ops = [ScriptOp(push=True) for _ in range(5)]
+    fired_at = []
+    eng.continue_all(ops, lambda st_, d: fired_at.append(len(done)), None,
+                     statuses=[None] * 5, cr=cr)
+    done = []
+    for idx in order:
+        done.append(idx)
+        ops[idx].fire()
+    assert cr.wait(timeout=5.0)
+    assert fired_at == [5]
+    eng.shutdown()
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 12), max_poll=st.integers(1, 5))
+def test_max_poll_bound(n, max_poll):
+    """I5: each test() runs at most max_poll callbacks of the CR."""
+    eng = Engine()
+    cr = eng.continue_init({"mpi_continue_poll_only": True,
+                            "mpi_continue_max_poll": max_poll})
+    count = {"n": 0}
+    for _ in range(n):
+        op = ScriptOp(push=True)
+        eng.continue_all([op], lambda st_, d: count.__setitem__("n", count["n"] + 1),
+                         None, cr=cr)
+        op.fire()
+    executed_per_test = []
+    while not cr.test():
+        executed_per_test.append(count["n"] - sum(executed_per_test))
+    executed_per_test.append(count["n"] - sum(executed_per_test))
+    assert count["n"] == n
+    assert all(e <= max_poll for e in executed_per_test)
+    eng.shutdown()
+
+
+@settings(max_examples=40, deadline=None)
+@given(sizes=st.lists(st.integers(1, 4), min_size=1, max_size=6))
+def test_cr_reactivation_cycles(sizes):
+    """I4: INACTIVE→ACTIVE→IDLE→COMPLETE→ACTIVE… cycles are always legal."""
+    eng = Engine()
+    cr = eng.continue_init()
+    for size in sizes:
+        ops = [ScriptOp(push=True) for _ in range(size)]
+        flag = eng.continue_all(ops, lambda st_, d: None, None, cr=cr)
+        assert flag is False
+        assert cr.cr_state is CRState.ACTIVE_REFERENCED
+        for op in ops:
+            op.fire()
+        assert cr.test() is True
+        assert cr.cr_state is CRState.COMPLETE
+    eng.shutdown()
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_threads=st.integers(2, 4), per_thread=st.integers(5, 20))
+def test_concurrent_registration_property(n_threads, per_thread):
+    """I1 under true concurrency: racing register/fire threads."""
+    eng = Engine()
+    cr = eng.continue_init()
+    lock = threading.Lock()
+    ran = []
+
+    def worker(tid):
+        for i in range(per_thread):
+            op = ScriptOp(push=True)
+            eng.continue_all([op], lambda st_, d: (lock.acquire(),
+                                                   ran.append(d),
+                                                   lock.release()),
+                             (tid, i), cr=cr)
+            op.fire()
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert cr.wait(timeout=10.0)
+    assert len(ran) == n_threads * per_thread
+    assert len(set(ran)) == len(ran)
+    eng.shutdown()

@@ -1,0 +1,178 @@
+"""Transport semantics + continuation integration tests."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (ANY_SOURCE, ANY_TAG, Engine, OpState, Status,
+                        Transport)
+
+
+@pytest.fixture
+def engine():
+    eng = Engine()
+    yield eng
+    eng.shutdown()
+
+
+def test_send_recv_matching():
+    tr = Transport(2)
+    recv = tr.irecv(1, source=0, tag=5)
+    send = tr.isend(0, 1, 5, b"hello")
+    assert recv.done() and send.done()
+    assert recv.status.payload == b"hello"
+    assert recv.status.source == 0 and recv.status.tag == 5
+
+
+def test_unexpected_message_then_recv():
+    tr = Transport(2)
+    send = tr.isend(0, 1, 9, b"x" * 10)   # eager: completes buffered
+    assert send.done()
+    recv = tr.irecv(1, source=ANY_SOURCE, tag=ANY_TAG)
+    assert recv.done()
+    assert recv.status.tag == 9
+
+
+def test_rendezvous_send_waits_for_recv():
+    tr = Transport(2, eager_threshold=4)
+    send = tr.isend(0, 1, 1, b"x" * 100)   # > threshold: rendezvous
+    assert not send.done()
+    tr.irecv(1)
+    assert send.done()
+
+
+def test_tag_and_source_selectivity():
+    tr = Transport(3)
+    r_tag2 = tr.irecv(2, source=ANY_SOURCE, tag=2)
+    tr.isend(0, 2, 1, b"one")
+    assert not r_tag2.done()
+    tr.isend(1, 2, 2, b"two")
+    assert r_tag2.done()
+    assert r_tag2.status.source == 1
+    r_any = tr.irecv(2)
+    assert r_any.done() and r_any.status.payload == b"one"
+
+
+def test_fifo_ordering_same_tag():
+    tr = Transport(2)
+    for i in range(5):
+        tr.isend(0, 1, 7, i)
+    got = [tr.irecv(1, tag=7).status.payload for _ in range(5)]
+    assert got == list(range(5))
+
+
+def test_recv_cancellation():
+    tr = Transport(2)
+    recv = tr.irecv(1, source=0, tag=3)
+    assert recv.cancel() is True
+    assert recv.state is OpState.CANCELLED
+    assert recv.status.test_cancelled()
+    # a matching send now goes to the unexpected queue, not the cancelled recv
+    tr.isend(0, 1, 3, b"late")
+    r2 = tr.irecv(1, tag=3)
+    assert r2.done() and r2.status.payload == b"late"
+
+
+def test_cancel_after_match_fails():
+    tr = Transport(2)
+    recv = tr.irecv(1)
+    tr.isend(0, 1, 0, b"m")
+    assert recv.cancel() is False
+    assert recv.status.payload == b"m"
+
+
+def test_continuation_on_recv(engine):
+    """The paper's central flow: callback fires when the message lands,
+    on the thread that made the completing transport call."""
+    tr = Transport(2, engine=engine)
+    cr = engine.continue_init()
+    seen = []
+    recv = tr.irecv(1, source=0, tag=1)
+    engine.continue_when(recv, lambda st, d: seen.append(st[0].payload),
+                         status=[None], cr=cr)
+    assert seen == []
+    tr.isend(0, 1, 1, b"payload")   # completes recv → continuation inline
+    assert seen == [b"payload"]
+    assert cr.test()
+
+
+def test_continuation_repost_from_callback(engine):
+    """Paper §2: a continuation body may start new operations (re-post).
+
+    Callbacks run nested-free: the re-posted recv's own continuation fires
+    later, not recursively.
+    """
+    tr = Transport(2, engine=engine)
+    cr = engine.continue_init()
+    got = []
+
+    def on_msg(st, d):
+        got.append(st[0].payload)
+        if len(got) < 3:
+            nxt = tr.irecv(1, source=0, tag=1)
+            engine.continue_when(nxt, on_msg, status=[None], cr=cr)
+
+    first = tr.irecv(1, source=0, tag=1)
+    engine.continue_when(first, on_msg, status=[None], cr=cr)
+    for i in range(3):
+        tr.isend(0, 1, 1, i)
+        engine.tick()
+    assert cr.wait(timeout=2.0)
+    assert got == [0, 1, 2]
+
+
+def test_latency_delivery(engine):
+    tr = Transport(2, engine=engine, latency_s=0.02)
+    try:
+        cr = engine.continue_init()
+        seen = threading.Event()
+        recv = tr.irecv(1, source=0, tag=1)
+        engine.continue_when(recv, lambda st, d: seen.set(), cr=cr)
+        t0 = time.monotonic()
+        tr.isend(0, 1, 1, b"delayed")
+        assert not seen.is_set()
+        assert cr.wait(timeout=2.0)
+        assert seen.is_set()
+        assert time.monotonic() - t0 >= 0.015
+    finally:
+        tr.shutdown()
+
+
+def test_multithreaded_ranks_pingpong(engine):
+    """Two 'ranks' on two threads ping-pong via continuations."""
+    tr = Transport(2, engine=engine)
+    n_rounds = 20
+    done = threading.Event()
+    log = []
+
+    def rank(rid, peer):
+        # enqueue_complete: recv completed before registration still fires the
+        # callback via the queue — no immediate-flag handling needed (§3.5).
+        cr = engine.continue_init({"mpi_continue_enqueue_complete": True})
+        count = {"n": 0}
+
+        def on_msg(st, d):
+            log.append((rid, st[0].payload))
+            count["n"] += 1
+            if st[0].payload < n_rounds:
+                tr.isend(rid, peer, 0, st[0].payload + 1)
+            nxt = tr.irecv(rid, source=peer, tag=0)
+            engine.continue_when(nxt, on_msg, status=[None], cr=cr)
+
+        first = tr.irecv(rid, source=peer, tag=0)
+        engine.continue_when(first, on_msg, status=[None], cr=cr)
+        if rid == 0:
+            tr.isend(0, peer, 0, 0)
+        deadline = time.monotonic() + 10
+        while count["n"] < n_rounds // 2 and time.monotonic() < deadline:
+            engine.tick()
+            time.sleep(1e-4)
+        done.set()
+
+    t0 = threading.Thread(target=rank, args=(0, 1))
+    t1 = threading.Thread(target=rank, args=(1, 0))
+    t0.start(); t1.start()
+    t0.join(timeout=15); t1.join(timeout=15)
+    assert done.is_set()
+    payloads = sorted(p for _, p in log)
+    assert payloads[0] == 0 and payloads[-1] >= n_rounds - 1

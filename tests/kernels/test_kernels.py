@@ -1,0 +1,145 @@
+"""Pallas kernel sweeps: shapes × dtypes, interpret-mode vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import kernel as fa_kernel, ref as fa_ref
+from repro.kernels.rmsnorm import kernel as rn_kernel, ref as rn_ref
+from repro.kernels.ssd_scan import kernel as ssd_kernel, ref as ssd_ref
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+       jnp.bfloat16: dict(atol=2e-2, rtol=2e-2)}
+
+
+def _mk_qkv(key, B, Sq, Sk, H, KV, D, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, D)).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,D", [
+    (1, 64, 1, 1, 16),      # minimal
+    (2, 128, 4, 2, 32),     # GQA
+    (1, 96, 8, 1, 64),      # MQA, non-pow2 seq
+    (2, 256, 4, 4, 64),     # MHA
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 33), (False, 0)])
+def test_flash_attention_sweep(dtype, B, S, H, KV, D, causal, window):
+    q, k, v = _mk_qkv(jax.random.PRNGKey(0), B, S, S, H, KV, D, dtype)
+    o_ref = fa_ref.attention(q, k, v, causal=causal, window=window)
+    o_pal = fa_kernel.flash_attention(q, k, v, causal=causal, window=window,
+                                      block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_pal, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("cache,off", [(40, 39), (64, 10), (96, 95)])
+def test_flash_attention_decode_offsets(cache, off):
+    """q_len=1 decode against a cache, various absolute positions."""
+    q, k, v = _mk_qkv(jax.random.PRNGKey(1), 2, 1, cache, 4, 2, 32,
+                      jnp.float32)
+    o_ref = fa_ref.attention(q, k, v, causal=True, q_offset=off)
+    o_pal = fa_kernel.flash_attention(q, k, v, causal=True, q_offset=off,
+                                      block_q=1, block_k=32, interpret=True)
+    np.testing.assert_allclose(o_ref, o_pal, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_kv_padding():
+    """KV length not divisible by block size exercises the pad/mask path."""
+    q, k, v = _mk_qkv(jax.random.PRNGKey(2), 1, 64, 100, 2, 2, 32,
+                      jnp.float32)
+    o_ref = fa_ref.attention(q, k, v, causal=False)
+    o_pal = fa_kernel.flash_attention(q, k, v, causal=False, block_q=32,
+                                      block_k=32, interpret=True)
+    np.testing.assert_allclose(o_ref, o_pal, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(0, 1),
+       st.sampled_from([16, 32]), st.sampled_from([48, 64, 128]))
+def test_flash_attention_property(b, kv, causal_i, d, s):
+    """Property sweep: random (B, KV, D, S) with H = 2·KV."""
+    q, k, v = _mk_qkv(jax.random.PRNGKey(b * 100 + kv), b, s, s, 2 * kv, kv,
+                      d, jnp.float32)
+    causal = bool(causal_i)
+    o_ref = fa_ref.attention(q, k, v, causal=causal)
+    o_pal = fa_kernel.flash_attention(q, k, v, causal=causal, block_q=16,
+                                      block_k=16, interpret=True)
+    np.testing.assert_allclose(o_ref, o_pal, atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 128), (3, 5, 256), (2, 7, 9, 512),
+                                   (16, 1024)])
+def test_rmsnorm_sweep(dtype, shape):
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, shape).astype(dtype)
+    s = jax.random.normal(jax.random.fold_in(key, 1), (shape[-1],))
+    o_ref = rn_ref.rmsnorm(x, s)
+    o_pal = rn_kernel.rmsnorm(x, s, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_pal, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,P,G,N,chunk", [
+    (1, 64, 2, 16, 1, 16, 16),
+    (2, 128, 4, 16, 2, 32, 32),
+    (1, 256, 8, 32, 1, 64, 64),
+    (2, 96, 4, 16, 4, 16, 32),   # T not a chunk multiple of 64; G=H/1
+])
+def test_ssd_scan_sweep(dtype, B, T, H, P, G, N, chunk):
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (B, T, H, P)).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))) * 0.1)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,))) * 0.5
+    Bm = jax.random.normal(ks[3], (B, T, G, N))
+    Cm = jax.random.normal(ks[4], (B, T, G, N))
+    D = jax.random.normal(ks[5], (H,)) * 0.1
+    if T % chunk:
+        chunk = 16
+    y_ref, _ = ssd_ref.ssd_sequential(x, dt, A, Bm, Cm, D)
+    y_pal = ssd_kernel.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk,
+                                interpret=True)
+    tol = dict(atol=2e-4, rtol=2e-3) if dtype == jnp.float32 else \
+        dict(atol=5e-2, rtol=5e-2)
+    np.testing.assert_allclose(np.asarray(y_ref, np.float32),
+                               np.asarray(y_pal, np.float32), **tol)
+
+
+def test_ssd_chunked_equals_sequential_long():
+    """The xla production path (chunked einsum) against the oracle."""
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 6)
+    B, T, H, P, G, N = 1, 512, 2, 16, 1, 32
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,))) * 0.5
+    Bm = jax.random.normal(ks[3], (B, T, G, N))
+    Cm = jax.random.normal(ks[4], (B, T, G, N))
+    D = jax.random.normal(ks[5], (H,)) * 0.1
+    y0, s0 = ssd_ref.ssd_sequential(x, dt, A, Bm, Cm, D)
+    y1, s1 = ssd_ref.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=128)
+    np.testing.assert_allclose(y0, y1, atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(s0, s1, atol=5e-4, rtol=5e-4)
+
+
+def test_kernel_impl_dispatch():
+    """ops wrappers honor the impl override context."""
+    from repro.kernels import impl as impl_mod
+    from repro.kernels.rmsnorm import ops as rn_ops
+    x = jnp.ones((4, 64))
+    s = jnp.ones((64,))
+    with impl_mod.use_impl("xla"):
+        a = rn_ops.rmsnorm(x, s)
+    with impl_mod.use_impl("pallas_interpret"):
+        b = rn_ops.rmsnorm(x, s)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+    with pytest.raises(ValueError):
+        impl_mod.resolve("cuda")

@@ -1,0 +1,137 @@
+"""Launch-layer tests: dry-run cells on a tiny debug mesh (subprocess —
+jax locks the virtual device count at first init), elastic resharding,
+HLO parser, and shape applicability."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "..", "src")
+
+
+def run_dryrun(arch, shape, *flags, timeout=420):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--debug-mesh", *flags]
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout, env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout[proc.stdout.index("{"):])
+
+
+@pytest.mark.slow
+def test_dryrun_decode_cell_exact():
+    r = run_dryrun("h2o_danube3_4b", "decode_32k", "--exact")
+    assert r["status"] == "ok"
+    assert r["roofline"]["flops_global"] > 0
+    assert r["cost"]["collective_bytes_per_device"] > 0
+    assert r["memory"]["argument_bytes_per_device"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_mesh():
+    r = run_dryrun("h2o_danube3_4b", "decode_32k", "--multi-pod")
+    assert r["status"] == "ok"   # proves the pod axis shards
+
+
+@pytest.mark.slow
+def test_dryrun_long_context_ssm():
+    r = run_dryrun("mamba2_370m", "long_500k")
+    assert r["status"] == "ok"
+
+
+def test_dryrun_long_skip_for_full_attention():
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES, is_applicable
+    ok, reason = is_applicable(get_config("llama3_405b"),
+                               SHAPES["long_500k"])
+    assert not ok and "quadratic" in reason
+    ok, _ = is_applicable(get_config("zamba2_1p2b"), SHAPES["long_500k"])
+    assert ok
+    ok, _ = is_applicable(get_config("h2o_danube3_4b"), SHAPES["long_500k"])
+    assert ok   # SWA bounds the cache
+
+
+def test_all_cells_have_input_specs():
+    """Every (arch × shape) cell must produce well-formed specs."""
+    from repro.configs import assigned_architectures, get_config
+    from repro.launch.shapes import SHAPES, input_specs, is_applicable
+    count = 0
+    for arch in assigned_architectures():
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            specs = input_specs(cfg, shape)
+            assert specs, (arch, shape.name)
+            for leaf in specs.values():
+                assert all(d > 0 for d in leaf.shape)
+            count += 1
+    assert count == 40   # the full assignment grid
+
+
+def test_mesh_factories_no_device_requirement():
+    """Importing mesh.py must not touch jax device state."""
+    import repro.launch.mesh  # noqa: F401  (import side-effect check)
+
+
+def test_hlo_collective_parser_units():
+    from repro.roofline.hlo import collective_bytes, roofline_terms
+    hlo = """
+HloModule test
+  %ag = bf16[4,128]{1,0} all-gather(%p0), replica_groups={{0,1}}
+  %p0 = bf16[2,128]{1,0} parameter(0)
+  %ar.1 = f32[64]{0} all-reduce(%conv), to_apply=%sum
+  %conv = f32[64]{0} convert(%ag)
+  %rs = (f32[32]{0}, f32[32]{0}) reduce-scatter(%a, %b)
+  %a = f32[64]{0} constant(0)
+  %b = f32[64]{0} constant(0)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 2 * 128 * 2
+    assert out["all-reduce"]["bytes"] == 64 * 4
+    assert out["reduce-scatter"]["bytes"] == 2 * 64 * 4
+    terms = roofline_terms(197e12, 819e9, 50e9, chips=256)
+    assert terms["compute_s"] == pytest.approx(1.0)
+    assert terms["memory_s"] == pytest.approx(1.0)
+    assert terms["collective_s"] == pytest.approx(1.0)
+
+
+@pytest.mark.slow
+def test_elastic_reshard_across_meshes():
+    """Params sharded on a 2×2×2 mesh survive a pod failure: reshard onto
+    1×2×2 with identical values (subprocess: needs 8 virtual devices)."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.runtime.elastic import build_mesh, shrink_after_failure, reshard_state
+from repro.sharding import specs_to_shardings
+
+devs = jax.devices()
+mesh = build_mesh(devs, (2, 2, 2), ("pod", "data", "model"))
+specs = {"w": ("fsdp", "tp"), "b": (None,)}
+shardings = specs_to_shardings(specs, mesh)
+state = {"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.ones((4,))}
+state = jax.tree_util.tree_map(jax.device_put, state, shardings)
+
+failed = [devs[1]]   # device in pod 0 → pod 0 evicted
+new_mesh, new_shape = shrink_after_failure(devs, (2, 2, 2),
+                                           ("pod", "data", "model"), failed)
+assert new_shape == (1, 2, 2), new_shape
+restored = reshard_state(state, specs, new_mesh)
+np.testing.assert_array_equal(np.asarray(restored["w"]),
+                              np.arange(64.0).reshape(8, 8))
+np.testing.assert_array_equal(np.asarray(restored["b"]), np.ones(4))
+# also expansion: reshard back onto the full 8-device mesh
+big = reshard_state(restored, specs, mesh)
+np.testing.assert_array_equal(np.asarray(big["w"]),
+                              np.arange(64.0).reshape(8, 8))
+print("ELASTIC_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=300, env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "ELASTIC_OK" in proc.stdout
