@@ -14,10 +14,21 @@ block). Mapping to the paper (DESIGN.md §7):
                    throughput and critical-path wait.
   loc.*            Table 3 — lines of code of the submit/progress paths.
   overlap.*        beyond-paper: continuation-driven trainer I/O overlap.
+  scheduler.*      beyond-paper: fifo vs affinity ready-queue schedulers
+                   under a multi-threaded completion storm.
+  serve.*          beyond-paper: continuation-driven continuous batching vs
+                   the synchronous static-batch ``greedy_generate`` loop,
+                   bursty multi-request workload — tokens/s and p99 TTFT.
+                   Also emitted machine-readable to BENCH_serve.json.
+
+``--quick`` runs a CI-smoke subset (notification + scheduler + loc +
+serve) at reduced sizes; ``--only BLOCK`` runs a single block by name.
 """
 from __future__ import annotations
 
+import argparse
 import inspect
+import json
 import threading
 import time
 from typing import Callable, List
@@ -25,6 +36,7 @@ from typing import Callable, List
 import numpy as np
 
 ROWS: List[str] = []
+QUICK = False
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -67,7 +79,8 @@ def bench_notification() -> None:
         eng.continue_when(op, lambda st, d: None, cr=cr)
         op.trigger()
 
-    us = _timeit(reg_continuation, 3000)
+    n_reg = 600 if QUICK else 3000
+    us = _timeit(reg_continuation, n_reg)
     emit("notification.register.continuation", us, "incl_trigger+run")
     cr.wait(timeout=10)
 
@@ -79,7 +92,7 @@ def bench_notification() -> None:
         op.flag = True
         mgr.testsome()
 
-    us = _timeit(reg_testsome, 3000)
+    us = _timeit(reg_testsome, n_reg)
     emit("notification.register.testsome_w32", us, "incl_trigger+run")
 
     # -- notification latency. For testsome, K cold outstanding ops sit
@@ -107,9 +120,9 @@ def bench_notification() -> None:
     # a completed-but-recently-posted op is invisible until promoted into
     # the window; ``backlog`` older ops drain in bursts ahead of it
     # (the PaRSEC §5.3 completion-detection delay)
-    for backlog in (0, 64, 256):
+    for backlog in ((0, 64) if QUICK else (0, 64, 256)):
         lat = []
-        for _ in range(60):
+        for _ in range(15 if QUICK else 60):
             mgr2 = TestsomeManager(window=32)
             cold = [Op() for _ in range(backlog)]
             for c in cold:
@@ -133,7 +146,7 @@ def bench_notification() -> None:
              float(np.mean(lat)) * 1e6, "poll+promotion")
 
     # -- throughput: completions/s with many concurrent ops
-    n = 20000
+    n = 4000 if QUICK else 20000
     eng3 = Engine()
     cr3 = eng3.continue_init({"mpi_continue_enqueue_complete": True})
     count = [0]
@@ -386,10 +399,209 @@ def bench_train_overlap() -> None:
     emit("overlap.trainer.speedup", 0.0, f"{blk / asy:.3f}x")
 
 
+# ==================================== scheduler: ready-queue contention
+def bench_scheduler() -> None:
+    """fifo (shared deque + one lock) vs affinity (per-thread queues with
+    stealing) under a multi-threaded completion storm — the hot
+    submit→inline-drain path the affinity scheduler optimizes."""
+    from repro.core import Engine, Status
+    from repro.core.completable import Completable
+
+    class Op(Completable):
+        @property
+        def supports_push(self):
+            return True
+
+        def trigger(self):
+            self._complete(Status())
+
+    n_threads = 4
+    per_thread = 2000 if QUICK else 10000
+    results = {}
+    for sched in ("fifo", "affinity"):
+        eng = Engine(scheduler=sched)
+        crs = [eng.continue_init() for _ in range(n_threads)]
+
+        def worker(cr):
+            for _ in range(per_thread):
+                op = Op()
+                eng.continue_when(op, lambda st, d: None, cr=cr)
+                op.trigger()     # discover + execute on this thread
+
+        threads = [threading.Thread(target=worker, args=(cr,))
+                   for cr in crs]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for cr in crs:
+            cr.wait(timeout=30)
+        dt = time.perf_counter() - t0
+        results[sched] = dt
+        n_ops = n_threads * per_thread
+        emit(f"scheduler.storm.{sched}", dt / n_ops * 1e6,
+             f"{n_threads}_threads_{n_ops / dt:.0f}_cb_per_s")
+        eng.shutdown()
+    emit("scheduler.storm.affinity_speedup", 0.0,
+         f"{results['fifo'] / results['affinity']:.3f}x")
+
+
+# ====================================== beyond paper: continuous batching
+def _serve_workload(n_requests: int, n_slots: int):
+    """Bursty request trace: an initial burst of 2×slots, then stragglers.
+
+    Output lengths vary ~4..28 tokens — the regime where continuous
+    batching beats static batching (no padding to the longest member, no
+    waiting for a batch to fill).
+    """
+    lengths = [(4 + 6 * (i % 5)) for i in range(n_requests)]       # 4..28
+    burst = min(n_requests, 2 * n_slots)
+    arrivals = [0.0] * burst + [0.03 * (i + 1)
+                                for i in range(n_requests - burst)]
+    return lengths, arrivals
+
+
+def bench_serve() -> None:
+    """Continuation-driven continuous batching vs synchronous static
+    batching built on the same jitted prefill/decode steps (the
+    ``greedy_generate`` loop, compile-warmed for fairness)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve import Request, ServeEngine
+    from repro.serve.request import _percentile
+    from repro.serve.steps import make_decode_step, make_prefill_step
+
+    cfg = get_config("paper_demo", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    n_slots, prompt_len, cache_len = 4, 8, 64
+    n_requests = 8 if QUICK else 16
+    lengths, arrivals = _serve_workload(n_requests, n_slots)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (n_requests, prompt_len), 0, cfg.vocab_size)
+    useful_tokens = sum(lengths)
+
+    # ---- continuous batching (continuation-driven) ----
+    serve = ServeEngine(cfg, params, max_batch=n_slots,
+                        max_cache_len=cache_len)
+    # warm the compile caches on the same engine instance
+    warm = [Request(prompts[0], 2), Request(prompts[1], 2)]
+    for r in warm:
+        serve.submit(r)
+    serve.run(until=lambda: len(serve.retired) == 2, timeout=120)
+
+    reqs = [Request(prompts[i], lengths[i]) for i in range(n_requests)]
+    t0 = time.monotonic()
+
+    def submitter():
+        for req, dt in zip(reqs, arrivals):
+            now = time.monotonic() - t0
+            if dt > now:
+                time.sleep(dt - now)
+            req.arrival_time = time.monotonic()
+            serve.submit(req)
+
+    sub = threading.Thread(target=submitter)
+    sub.start()
+    serve.run(until=lambda: len(serve.retired) == 2 + n_requests,
+              timeout=300)
+    sub.join()
+    cont_makespan = max(r.finish_time for r in reqs) - t0
+    cont_tps = useful_tokens / cont_makespan
+    cont_ttft = sorted(r.ttft for r in reqs)
+    serve.shutdown()
+
+    # ---- static batching (synchronous greedy_generate loop) ----
+    prefill = jax.jit(make_prefill_step(cfg, cache_len))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+
+    def static_generate(batch_prompts, n_tokens):
+        """The greedy_generate loop body, on pre-jitted (warm) steps."""
+        logits, cache = prefill(params, {"tokens": batch_prompts})
+        pos = batch_prompts.shape[1]
+        out = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)]
+        for i in range(n_tokens - 1):
+            logits, cache = decode(params, cache, out[-1][:, None],
+                                   jnp.int32(pos + i))
+            out.append(jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32))
+        return jnp.stack(out, axis=1)
+
+    jax.block_until_ready(static_generate(prompts[:n_slots], 2))  # warm
+    t0 = time.monotonic()
+    static_ttft = []
+    done = 0
+    while done < n_requests:
+        now = time.monotonic() - t0
+        ready = [i for i in range(done, n_requests) if arrivals[i] <= now]
+        if not ready:
+            time.sleep(1e-3)
+            continue
+        batch = ready[:n_slots]
+        idx = list(batch) + [batch[-1]] * (n_slots - len(batch))  # pad batch
+        n_steps = max(lengths[i] for i in batch)
+        out = static_generate(prompts[jnp.asarray(idx)], n_steps)
+        jax.block_until_ready(out)       # synchronous: block per batch
+        t_end = time.monotonic() - t0
+        # tokens observable only when the whole batch finishes
+        static_ttft.extend(t_end - arrivals[i] for i in batch)
+        done += len(batch)
+    static_makespan = time.monotonic() - t0
+    static_tps = useful_tokens / static_makespan
+
+    def p99(vals):
+        return _percentile(sorted(vals), 0.99)
+
+    def p50(vals):
+        return _percentile(sorted(vals), 0.50)
+
+    emit("serve.continuous_batching", cont_makespan / useful_tokens * 1e6,
+         f"{cont_tps:.0f}_tok_per_s_ttft_p99_{p99(cont_ttft) * 1e3:.0f}ms")
+    emit("serve.static_greedy", static_makespan / useful_tokens * 1e6,
+         f"{static_tps:.0f}_tok_per_s_ttft_p99_{p99(static_ttft) * 1e3:.0f}ms")
+    emit("serve.speedup", 0.0, f"{cont_tps / static_tps:.3f}x")
+    with open("BENCH_serve.json", "w") as f:
+        json.dump({
+            "workload": {"n_requests": n_requests, "n_slots": n_slots,
+                         "prompt_len": prompt_len, "lengths": lengths,
+                         "arrivals_s": arrivals},
+            "continuous": {"tokens_per_s": cont_tps,
+                           "makespan_s": cont_makespan,
+                           "ttft_p50_s": p50(cont_ttft),
+                           "ttft_p99_s": p99(cont_ttft)},
+            "static_greedy": {"tokens_per_s": static_tps,
+                              "makespan_s": static_makespan,
+                              "ttft_p50_s": p50(static_ttft),
+                              "ttft_p99_s": p99(static_ttft)},
+            "speedup_tokens_per_s": cont_tps / static_tps,
+        }, f, indent=2)
+    print("# wrote BENCH_serve.json", flush=True)
+
+
+ALL_BENCHES = (bench_notification, bench_scheduler, bench_zones,
+               bench_dataflow, bench_offload, bench_loc,
+               bench_train_overlap, bench_serve)
+QUICK_BENCHES = (bench_notification, bench_scheduler, bench_loc, bench_serve)
+
+
 def main() -> None:
+    global QUICK
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke subset at reduced sizes")
+    ap.add_argument("--only", default=None, metavar="BLOCK",
+                    help="run a single block (e.g. 'serve', 'dataflow')")
+    args = ap.parse_args()
+    QUICK = args.quick
+    benches = QUICK_BENCHES if args.quick else ALL_BENCHES
+    if args.only:
+        benches = [b for b in ALL_BENCHES
+                   if b.__name__ == f"bench_{args.only}"]
+        if not benches:
+            raise SystemExit(f"unknown block {args.only!r}")
     print("# name,us_per_call,derived")
-    for bench in (bench_notification, bench_zones, bench_dataflow,
-                  bench_offload, bench_loc, bench_train_overlap):
+    for bench in benches:
         print(f"# --- {bench.__name__} ---", flush=True)
         bench()
 

@@ -1,9 +1,12 @@
-"""Batched serving example: prefill + KV-cache greedy decode.
+"""Continuous-batching serving example (continuation-driven).
 
-Serves a reduced-config model (CPU): one prefill over the prompt batch,
-then token-by-token decode with donated caches — the same
-``prefill_step``/``serve_step`` programs the dry-run lowers at the
-32k/500k shapes.
+Serves a reduced-config model (CPU) through ``repro.serve.ServeEngine``:
+requests are admitted into decode slots as they arrive (admission queues on
+a ``poll_only`` continuation request, so bursts never preempt the decode
+loop), each vmapped decode step advances every occupied slot by one token,
+and per-step ``ArrayOp`` continuations retire finished sequences — freeing
+their slots for waiting requests immediately instead of padding along to
+the longest member of a static batch.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py [--arch h2o_danube3_4b]
 """
@@ -11,35 +14,49 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import lm
-from repro.serve.steps import greedy_generate
+from repro.serve import Request, ServeEngine
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o_danube3_4b",
                     help="architecture (reduced config is used)")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots (max concurrent sequences)")
     ap.add_argument("--prompt-len", type=int, default=12)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16,
+                    help="max new tokens; request i gets 4 + i*3 capped here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
     key = jax.random.PRNGKey(0)
     params = lm.init_params(key, cfg)
     prompts = jax.random.randint(jax.random.fold_in(key, 1),
-                                 (args.batch, args.prompt_len), 0,
+                                 (args.requests, args.prompt_len), 0,
                                  cfg.vocab_size)
+    # heterogeneous output lengths — where continuous batching shines
+    lengths = [min(args.new_tokens, 4 + 3 * i) for i in range(args.requests)]
+
+    serve = ServeEngine(cfg, params, max_batch=args.slots,
+                        max_cache_len=args.prompt_len + args.new_tokens)
+    reqs = [Request(prompts[i], lengths[i]) for i in range(args.requests)]
     t0 = time.time()
-    out = greedy_generate(cfg, params, prompts, args.new_tokens,
-                          max_cache_len=args.prompt_len + args.new_tokens)
+    for r in reqs:
+        serve.submit(r)
+    serve.close_intake()
+    serve.run(timeout=600)
     dt = time.time() - t0
-    print(f"arch={cfg.name} batch={args.batch} "
-          f"prompt={args.prompt_len} new={args.new_tokens}")
-    for i in range(args.batch):
-        print(f"  req {i}: {list(map(int, out[i]))}")
-    n_tok = args.batch * args.new_tokens
+    print(f"arch={cfg.name} requests={args.requests} slots={args.slots} "
+          f"prompt={args.prompt_len}")
+    for r in reqs:
+        print(f"  req {r.req_id}: ttft={r.ttft * 1e3:7.1f}ms "
+              f"n={len(r.tokens):2d} tokens={r.tokens}")
+    m = serve.metrics()
+    n_tok = m["total_tokens"]
     print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s incl. "
-          f"compile)")
+          f"compile); steps={m['steps']} slot_steps={m['slot_steps']} "
+          f"padded={m['padded_steps']}")
+    serve.shutdown()

@@ -17,6 +17,9 @@ from repro.core.continuation import (CallbackError, ConcurrentCompletionError,
 from repro.core.engine import Engine, default_engine, reset_default_engine
 from repro.core.info import (THREAD_ANY, THREAD_APPLICATION, ContinueInfo,
                              make_info)
+from repro.core.progress import Progress
+from repro.core.scheduler import (AffinityScheduler, FifoScheduler, Scheduler,
+                                  make_scheduler)
 from repro.core.status import STATUS_IGNORE, OpState, Status
 from repro.core.testsome import TestsomeManager
 from repro.core.transport import ANY_SOURCE, ANY_TAG, RecvOp, SendOp, Transport
@@ -27,6 +30,7 @@ __all__ = [
     "ContinuationRequest", "CRState", "Engine", "default_engine",
     "reset_default_engine", "THREAD_ANY", "THREAD_APPLICATION",
     "ContinueInfo", "make_info", "STATUS_IGNORE", "OpState", "Status",
-    "TestsomeManager", "ANY_SOURCE", "ANY_TAG", "RecvOp", "SendOp",
-    "Transport",
+    "Progress", "Scheduler", "FifoScheduler", "AffinityScheduler",
+    "make_scheduler", "TestsomeManager", "ANY_SOURCE", "ANY_TAG", "RecvOp",
+    "SendOp", "Transport",
 ]

@@ -145,12 +145,13 @@ class ContinuationRequest(Completable):
             self.stats["registered"] += count
 
     def _continuation_ready(self, cont: Continuation) -> None:
-        """Routing: poll_only CRs keep their own queue; others go global."""
+        """Routing: poll_only CRs keep their own queue; others go to the
+        engine's scheduler (which may execute inline when policy allows)."""
         if self.info.poll_only:
             with self._lock:
                 self._ready_q.append(cont)
         else:
-            self.engine._enqueue_ready(cont)
+            self.engine.scheduler.submit(cont)
 
     def _deregister(self, error: Optional[BaseException]) -> None:
         """Called by the engine after a continuation executed."""

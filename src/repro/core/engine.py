@@ -1,50 +1,51 @@
-"""The continuation engine — registration, discovery, progress, execution.
+"""The continuation engine facade — registration + policy wiring.
 
-Execution model (paper §2–3):
+Execution model (paper §2–3), now split across three components:
 
-* **Registration** (``continue_when`` / ``continue_all``): attach a callback
-  to active op(s); if *all* are already complete and the CR does not set
-  ``enqueue_complete``, return ``flag=True`` *without* invoking the callback
-  (immediate-completion fast path, paper §2.2). Otherwise the continuation is
-  registered with the CR and hooks are installed on each op.
+* **Registration** (this module, ``continue_when`` / ``continue_all``):
+  attach a callback to active op(s); if *all* are already complete and the
+  CR does not set ``enqueue_complete``, return ``flag=True`` *without*
+  invoking the callback (immediate-completion fast path, paper §2.2).
+  Otherwise the continuation is registered with the CR and hooks are
+  installed on each op.
 
-* **Discovery**: push-capable ops (host futures, transport messages, CRs)
-  publish completion from whatever thread finished the work — the analogue of
-  "any thread calling into MPI" finding the operation complete. Poll-mode ops
-  (``jax.Array``) are discovered by progress scans: every engine entry point
-  (``tick``, ``cr.test/wait``, transport calls) advances the scan, and an
-  optional internal progress thread does too. CRs with ``thread="any"`` may
-  additionally hand array ops to *waiter threads* that block on readiness —
-  the MPI-internal progress thread analogue.
+* **Discovery** (``core.progress.Progress``): push-capable ops (host
+  futures, transport messages, CRs) publish completion from whatever thread
+  finished the work. Poll-mode ops (``jax.Array``) are discovered by
+  progress scans: every engine entry point (``tick``, ``cr.test/wait``,
+  transport calls) advances the scan, and an optional internal progress
+  thread does too. CRs with ``thread="any"`` may additionally hand array
+  ops to *waiter threads* that block on readiness.
 
-* **Execution**: a ready continuation runs (a) inline on the discovering
-  thread when policy allows (not poll_only; thread policy admits the current
-  thread; not nested inside another callback — paper §3.1), else (b) from the
-  shared ready queue at the next engine entry of an eligible thread, else
-  (c) for poll_only CRs, only inside ``cr.test()`` — bounded by ``max_poll``.
+* **Execution** (``core.scheduler.Scheduler``): a ready continuation runs
+  (a) inline on the discovering thread when policy allows (not poll_only;
+  thread policy admits the current thread; not nested inside another
+  callback — paper §3.1), else (b) from the scheduler's ready queue(s) at
+  the next engine entry of an eligible thread, else (c) for poll_only CRs,
+  only inside ``cr.test()`` — bounded by ``max_poll``.
+
+``Engine`` wires a ``Scheduler`` (pluggable: ``"fifo"`` shared-deque FIFO
+or ``"affinity"`` per-thread queues with stealing) to a ``Progress``
+instance and exposes the paper's public API: ``continue_init``,
+``continue_when``, ``continue_all``, ``tick``, and CR ``test/wait/free``.
 """
 from __future__ import annotations
 
-import collections
 import itertools
-import queue as queue_mod
 import threading
 from typing import Any, List, Optional, Sequence, Union
 
-from repro.core.completable import ArrayOp, Completable
+from repro.core.completable import Completable
 from repro.core.continuation import Continuation, ContinuationRequest
 from repro.core.info import THREAD_ANY, ContinueInfo, make_info
+from repro.core.progress import Progress
+from repro.core.scheduler import (Scheduler, in_callback, in_registration,
+                                  make_scheduler, registration_guard)
 from repro.core.status import Status
 
-_TLS = threading.local()
-
-
-def _in_callback() -> bool:
-    return getattr(_TLS, "depth", 0) > 0
-
-
-def _in_registration() -> bool:
-    return getattr(_TLS, "registering", 0) > 0
+# Back-compat aliases: these lived here before the scheduler split.
+_in_callback = in_callback
+_in_registration = in_registration
 
 
 class Engine:
@@ -52,39 +53,36 @@ class Engine:
     (``default_engine()``), but apps may build isolated engines (tests do).
     """
 
-    def __init__(self, *, progress_thread: bool = False,
+    def __init__(self, *, scheduler: Union[str, Scheduler] = "fifo",
+                 progress_thread: bool = False,
                  progress_interval: float = 2e-4,
                  n_waiters: int = 0,
                  inline_limit: int = 16,
                  wait_poll_interval: float = 5e-4) -> None:
-        # pending poll-mode ops awaiting discovery scans
-        self._poll_ops: list[Completable] = []
-        self._poll_lock = threading.Lock()
-        # ready continuations of non-poll_only CRs
-        self._ready: collections.deque[Continuation] = collections.deque()
-        self._ready_lock = threading.Lock()
+        self.scheduler = make_scheduler(scheduler, inline_limit=inline_limit)
+        self.progress = Progress(self.scheduler,
+                                 progress_thread=progress_thread,
+                                 progress_interval=progress_interval,
+                                 n_waiters=n_waiters)
         self._seq = itertools.count()
-        #: max continuations drained inline per discovery (bounds latency of
-        #: the discovering thread; the full queue drains on test/tick)
-        self.inline_limit = inline_limit
         self.wait_poll_interval = wait_poll_interval
-        self._internal_threads: set[int] = set()
-        self._shutdown = threading.Event()
-        self._progress_thread: Optional[threading.Thread] = None
-        if progress_thread:
-            self._progress_thread = threading.Thread(
-                target=self._progress_loop, args=(progress_interval,),
-                name="contin-progress", daemon=True)
-            self._progress_thread.start()
-        self._waiter_q: "queue_mod.Queue[Optional[ArrayOp]]" = queue_mod.Queue()
-        self._waiters = [
-            threading.Thread(target=self._waiter_loop,
-                             name=f"contin-waiter-{i}", daemon=True)
-            for i in range(n_waiters)]
-        for w in self._waiters:
-            w.start()
-        self.stats = {"progress_calls": 0, "inline_runs": 0, "queued_runs": 0,
-                      "poll_scans": 0}
+        self._progress_calls = 0
+
+    @property
+    def inline_limit(self) -> int:
+        return self.scheduler.inline_limit
+
+    @inline_limit.setter
+    def inline_limit(self, value: int) -> None:
+        self.scheduler.inline_limit = value
+
+    @property
+    def stats(self) -> dict:
+        """Merged component counters (kept flat for existing consumers)."""
+        out = {"progress_calls": self._progress_calls}
+        out.update(self.scheduler.stats)
+        out.update(self.progress.stats)
+        return out
 
     # ------------------------------------------------------------------ setup
     def continue_init(self, info: Optional[Union[dict, ContinueInfo]] = None,
@@ -136,113 +134,20 @@ class Engine:
         # Callbacks are never invoked from within continue_[all] itself —
         # registration may happen inside an application critical region
         # (paper §3.1) — so inline execution is suppressed while hooks are
-        # installed; a ready continuation lands on the queue instead.
-        _TLS.registering = getattr(_TLS, "registering", 0) + 1
-        try:
+        # installed; a ready continuation lands on the scheduler instead.
+        with registration_guard():
             for i, op in enumerate(ops):
                 if not op.supports_push and op.state.name == "PENDING":
                     needs_scan.append(op)
                 # Hooks fire inline for already-complete ops, so mixed
                 # immediate/pending groups resolve correctly.
                 op.add_ready_hook(cont.hook_for(i))
-        finally:
-            _TLS.registering -= 1
         if needs_scan:
-            hand_to_waiters = (cr.info.thread == THREAD_ANY and self._waiters)
-            with self._poll_lock:
-                for op in needs_scan:
-                    if hand_to_waiters and isinstance(op, ArrayOp):
-                        self._waiter_q.put(op)
-                    else:
-                        self._poll_ops.append(op)
+            hand_to_waiters = (cr.info.thread == THREAD_ANY
+                               and self.progress.has_waiters)
+            for op in needs_scan:
+                self.progress.watch(op, use_waiter=hand_to_waiters)
         return False
-
-    # ------------------------------------------------------------- discovery
-    def _enqueue_ready(self, cont: Continuation) -> None:
-        """A continuation of a non-poll_only CR became ready."""
-        with self._ready_lock:
-            self._ready.append(cont)
-        if _in_registration():
-            return  # never execute inside continue_[all] (paper §3.1)
-        # Low-latency path: run inline if the current thread is eligible.
-        self._drain_ready(limit=self.inline_limit, inline=True)
-
-    def _thread_eligible(self, cr: ContinuationRequest) -> bool:
-        if _in_callback():
-            return False  # no nested continuation execution (paper §3.1)
-        if threading.get_ident() in self._internal_threads:
-            return cr.info.thread == THREAD_ANY
-        return True
-
-    def _scan_polls(self) -> None:
-        """Discover completions of poll-mode ops (cheap, lock-sliced)."""
-        self.stats["poll_scans"] += 1
-        with self._poll_lock:
-            ops = list(self._poll_ops)
-        done_ops = [op for op in ops if op.done()]  # done() fires hooks
-        if done_ops:
-            done_set = set(map(id, done_ops))
-            with self._poll_lock:
-                self._poll_ops = [op for op in self._poll_ops
-                                  if id(op) not in done_set]
-
-    # ------------------------------------------------------------- execution
-    def _run_one(self, cont: Continuation) -> None:
-        _TLS.depth = getattr(_TLS, "depth", 0) + 1
-        try:
-            err = cont.run()
-        finally:
-            _TLS.depth -= 1
-        cont.cr._deregister(err)
-
-    def _drain_ready(self, limit: int = -1, inline: bool = False,
-                     for_cr: Optional[ContinuationRequest] = None,
-                     cr_limit: int = -1) -> int:
-        """Run ready continuations from the shared queue.
-
-        ``cr_limit`` caps executions belonging to ``for_cr`` (max_poll during
-        a test of that CR). Ineligible continuations (thread policy) are
-        requeued for an eligible thread.
-        """
-        ran = 0
-        ran_for_cr = 0
-        requeue: list[Continuation] = []
-        while limit < 0 or ran < limit:
-            with self._ready_lock:
-                if not self._ready:
-                    break
-                cont = self._ready.popleft()
-            if not self._thread_eligible(cont.cr):
-                requeue.append(cont)
-                # inline discovery on an ineligible thread: stop early
-                if inline:
-                    break
-                continue
-            if for_cr is not None and cont.cr is for_cr and cr_limit >= 0 \
-                    and ran_for_cr >= cr_limit:
-                requeue.append(cont)
-                break
-            self._run_one(cont)
-            ran += 1
-            if for_cr is not None and cont.cr is for_cr:
-                ran_for_cr += 1
-            self.stats["inline_runs" if inline else "queued_runs"] += 1
-        if requeue:
-            with self._ready_lock:
-                self._ready.extendleft(reversed(requeue))
-        return ran
-
-    def _drain_cr_queue(self, cr: ContinuationRequest, limit: int) -> int:
-        """Run a poll_only CR's private ready queue (inside cr.test())."""
-        ran = 0
-        while limit < 0 or ran < limit:
-            with cr._lock:
-                if not cr._ready_q:
-                    break
-                cont = cr._ready_q.popleft()
-            self._run_one(cont)
-            ran += 1
-        return ran
 
     # -------------------------------------------------------------- progress
     def tick(self) -> None:
@@ -250,51 +155,54 @@ class Engine:
 
         The analogue of "an application thread called into MPI".
         """
-        self.stats["progress_calls"] += 1
-        self._scan_polls()
-        self._drain_ready()
+        self._progress_calls += 1
+        self.progress.scan()
+        self.scheduler.drain()
+
+    def enter(self) -> None:
+        """Lightweight entry hook: run eligible ready continuations inline.
+
+        Transport (and other substrates) call this on every operation — the
+        analogue of "continuations may be invoked as soon as any thread
+        calls into MPI" (paper §3) — without paying for a full poll scan.
+        """
+        self.scheduler.drain(limit=self.scheduler.inline_limit, inline=True)
 
     def _progress_for_test(self, cr: ContinuationRequest) -> None:
         """Progress driven by ``cr.test()``: bounded by the CR's max_poll."""
-        self.stats["progress_calls"] += 1
-        self._scan_polls()
+        self._progress_calls += 1
+        self.progress.scan()
         budget = cr.info.max_poll
         if cr.info.poll_only:
             # Other CRs' callbacks still run (we are an application thread
             # inside the engine) — but this CR's run only here, capped.
-            self._drain_cr_queue(cr, budget)
-            self._drain_ready()
+            self.scheduler.drain_cr_queue(cr, budget)
+            self.scheduler.drain()
         else:
-            self._drain_ready(for_cr=cr, cr_limit=budget)
+            self.scheduler.drain(for_cr=cr, cr_limit=budget)
 
-    def _progress_loop(self, interval: float) -> None:
-        self._internal_threads.add(threading.get_ident())
-        while not self._shutdown.wait(interval):
-            self._scan_polls()
-            self._drain_ready()
+    # ------------------------------------------------ back-compat delegates
+    # Pre-split internal entry points; substrate code now uses the
+    # components directly, but external callers may still poke these.
+    def _enqueue_ready(self, cont: Continuation) -> None:
+        self.scheduler.submit(cont)
 
-    def _waiter_loop(self) -> None:
-        self._internal_threads.add(threading.get_ident())
-        while True:
-            op = self._waiter_q.get()
-            if op is None or self._shutdown.is_set():
-                break
-            op.block()           # fires hooks on this internal thread
-            self._drain_ready()  # eligible only for thread=any CRs
+    def _drain_ready(self, limit: int = -1, inline: bool = False,
+                     for_cr: Optional[ContinuationRequest] = None,
+                     cr_limit: int = -1) -> int:
+        return self.scheduler.drain(limit=limit, inline=inline,
+                                    for_cr=for_cr, cr_limit=cr_limit)
+
+    def _scan_polls(self) -> None:
+        self.progress.scan()
 
     # -------------------------------------------------------------- lifecycle
     def shutdown(self) -> None:
-        self._shutdown.set()
-        for _ in self._waiters:
-            self._waiter_q.put(None)
-        for w in self._waiters:
-            w.join(timeout=2.0)
-        if self._progress_thread is not None:
-            self._progress_thread.join(timeout=2.0)
+        self.progress.shutdown()
 
     def register_internal_thread(self) -> None:
         """Mark the calling thread as engine-internal (thread=any gating)."""
-        self._internal_threads.add(threading.get_ident())
+        self.scheduler.register_internal_thread()
 
 
 _default_engine: Optional[Engine] = None

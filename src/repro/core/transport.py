@@ -174,8 +174,7 @@ class Transport:
     def _on_enter(self) -> None:
         """Run eligible ready continuations — 'thread inside MPI' semantics."""
         if self.engine is not None:
-            self.engine._drain_ready(limit=self.engine.inline_limit,
-                                     inline=True)
+            self.engine.enter()
 
     def _deliver(self, send: SendOp) -> None:
         box = self._boxes[send.dest]

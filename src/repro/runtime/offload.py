@@ -64,6 +64,8 @@ class ContinuationBackend:
 class TestsomeBackend:
     """Reference: request groups via parallel arrays + Testsome window."""
 
+    __test__ = False     # keep pytest from collecting this backend class
+
     def __init__(self, window: int = 16) -> None:
         self.manager = TestsomeManager(window=window)
 

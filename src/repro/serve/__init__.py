@@ -1,0 +1,26 @@
+"""Serving subsystem: continuation-driven continuous batching.
+
+Layers:
+
+* ``serve.steps``   — jittable prefill/decode step factories and the
+  synchronous ``greedy_generate`` baseline (application-space completion
+  handling — the pattern the paper argues against).
+* ``serve.request`` — request lifecycle; each ``Request`` is a
+  ``Completable`` so callers attach continuations to completions.
+* ``serve.batcher`` — thread-safe admission on a ``poll_only +
+  enqueue_complete`` CR; bursts queue without preempting the decode loop.
+* ``serve.engine``  — the continuous-batching decode loop where each
+  step's ``jax.Array`` outputs are ``ArrayOp``s whose continuations
+  re-enqueue or retire sequences, overlapping prefill with in-flight
+  decode.
+"""
+from repro.serve.batcher import Batcher
+from repro.serve.engine import ServeEngine, serve_requests
+from repro.serve.request import Request, RequestState, summarize
+from repro.serve.steps import (greedy_generate, make_decode_step,
+                               make_prefill_step)
+
+__all__ = [
+    "Batcher", "ServeEngine", "serve_requests", "Request", "RequestState",
+    "summarize", "greedy_generate", "make_decode_step", "make_prefill_step",
+]

@@ -1,0 +1,107 @@
+"""Admission batching on a ``poll_only + enqueue_complete`` CR.
+
+Clients may submit requests from any thread at any rate. Each submission
+is an already-complete push op registered on a CR configured exactly like
+the paper's burst-tolerant activation handling (§3.5 info keys, §5.3.1
+usage):
+
+* ``enqueue_complete`` — registration never takes the immediate-completion
+  fast path, so every submission flows through the continuation machinery
+  uniformly (no flag handling on the submit path);
+* ``poll_only``        — admission callbacks run *only* inside
+  ``cr.test()``, which only the decode loop calls. A burst of submissions
+  therefore queues on the CR without ever preempting in-flight decode
+  dispatch, and the loop admits on its own step boundaries.
+
+``admit(n)`` is the decode loop's entry point: one ``cr.test()`` drains
+the queued admission callbacks (cheap appends), then up to ``n`` requests
+are handed out in arrival order.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import List, Optional
+
+from repro.core.completable import Completable
+from repro.core.engine import Engine
+from repro.core.status import Status
+from repro.serve.request import Request, RequestState
+
+
+class _SubmitOp(Completable):
+    """Push op representing 'a request arrived'; complete at construction."""
+
+    @property
+    def supports_push(self) -> bool:
+        return True
+
+
+class Batcher:
+    """Thread-safe request intake feeding a single decode loop."""
+
+    def __init__(self, engine: Engine) -> None:
+        self.engine = engine
+        self.cr = engine.continue_init({
+            "mpi_continue_poll_only": True,
+            "mpi_continue_enqueue_complete": True,
+        })
+        # only mutated by admission callbacks, i.e. inside cr.test() on the
+        # decode-loop thread
+        self._pending: collections.deque[Request] = collections.deque()
+        self._closed = threading.Event()
+        self.stats = {"submitted": 0, "admitted": 0, "dropped_cancelled": 0}
+
+    # ---------------------------------------------------------- client side
+    def submit(self, request: Request) -> Request:
+        """Enqueue a request (any thread). Returns the request for chaining."""
+        if self._closed.is_set():
+            raise RuntimeError("batcher intake is closed")
+        self.stats["submitted"] += 1
+        op = _SubmitOp()
+        op._complete(Status(payload=request))
+        # poll_only routes the ready continuation to the CR's private queue;
+        # nothing executes on this (client) thread.
+        self.engine.continue_when(op, self._on_submit, request, cr=self.cr)
+        return request
+
+    def close(self) -> None:
+        """Stop accepting new submissions (already-queued ones still admit)."""
+        self._closed.set()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed.is_set()
+
+    # ----------------------------------------------------------- loop side
+    def _on_submit(self, statuses, request: Request) -> None:
+        self._pending.append(request)
+
+    def admit(self, max_n: int) -> List[Request]:
+        """Drain queued submissions and hand out up to ``max_n`` requests.
+
+        Must be called from the decode loop only (single-tester CR rule).
+        """
+        self.cr.test()
+        out: List[Request] = []
+        while self._pending and len(out) < max_n:
+            req = self._pending.popleft()
+            if req.req_state is RequestState.CANCELLED:
+                self.stats["dropped_cancelled"] += 1
+                continue
+            req.on_admitted()
+            out.append(req)
+        self.stats["admitted"] += len(out)
+        return out
+
+    @property
+    def queued(self) -> int:
+        """Submissions already transferred to the pending list (does not
+        count ones still sitting on the CR until the next admit())."""
+        return len(self._pending)
+
+    @property
+    def drained(self) -> bool:
+        """True when intake is closed and nothing is waiting for admission."""
+        return (self._closed.is_set() and not self._pending
+                and self.cr.active_count == 0)

@@ -1,0 +1,286 @@
+"""Continuation-driven continuous-batching decode engine.
+
+The serving analogue of the paper's completion-notification claim: instead
+of an application-space synchronous loop (``steps.greedy_generate`` — run a
+static batch to the longest member, block, repeat), the decode loop keeps a
+fixed set of *slots*, each holding one in-flight sequence with its own KV
+cache and position:
+
+* **decode** — one vmapped decode step advances every occupied slot by one
+  token (per-slot positions, donated stacked cache). The step's next-token
+  ``jax.Array`` is wrapped in an ``ArrayOp`` whose continuation does the
+  bookkeeping when the device work *actually* finishes: records
+  first-token latency, retires sequences that reached their token budget
+  (freeing their slots), and releases the in-flight window so the loop can
+  dispatch further ahead. The Python loop never blocks on device work.
+* **admission** — new requests queue on the ``Batcher``'s
+  ``poll_only + enqueue_complete`` CR (paper §3.5) and are admitted into
+  free slots at step boundaries; their prefill dispatches while previously
+  issued decode steps are still in flight on device, so prefill of new
+  requests overlaps in-flight decode.
+* **retirement** — a finished ``Request`` is itself a ``Completable``:
+  its continuation fires for whoever attached one, and ``request.wait()``
+  unblocks the submitting client.
+
+Continuous batching beats static batching whenever output lengths vary or
+arrivals straggle: finished slots are refilled immediately instead of
+padding along until the longest member of a static batch completes.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, List, Optional, Sequence, Set, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ArrayOp, Engine, Scheduler
+from repro.models import lm
+from repro.models.common import AUDIO, ModelConfig
+from repro.serve.batcher import Batcher
+from repro.serve.request import Request, RequestState, summarize
+from repro.serve.steps import make_decode_step, make_prefill_step
+
+
+class ServeEngine:
+    """Continuous-batching engine over ``max_batch`` decode slots.
+
+    Single-consumer: exactly one thread drives ``step()``/``run()`` (the
+    decode loop); any thread may ``submit()``. Slot state is touched only
+    by the loop thread — continuations registered here run on it because
+    the CRs use the default ``thread=application`` policy and the loop is
+    the only thread that calls into the engine.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *,
+                 max_batch: int = 4,
+                 max_cache_len: int = 256,
+                 max_inflight: int = 2,
+                 engine: Optional[Engine] = None,
+                 scheduler: Union[str, Scheduler] = "fifo") -> None:
+        if cfg.family == AUDIO:
+            raise NotImplementedError(
+                "ServeEngine drives token-in/token-out LM decode; audio "
+                "enc-dec serving still goes through serve.steps directly")
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = int(max_batch)
+        self.max_cache_len = int(max_cache_len)
+        self.max_inflight = max(1, int(max_inflight))
+        self._own_engine = engine is None
+        self.engine = engine if engine is not None else \
+            Engine(scheduler=scheduler)
+        self.batcher = Batcher(self.engine)
+        # decode-step completions: enqueue_complete so even an
+        # already-materialized step flows through the continuation path
+        self.cr_steps = self.engine.continue_init(
+            {"mpi_continue_enqueue_complete": True})
+
+        self._prefill_fn = jax.jit(make_prefill_step(cfg, self.max_cache_len))
+        decode_one = make_decode_step(cfg)
+
+        def _batched(params, caches, tokens, positions):
+            return jax.vmap(decode_one,
+                            in_axes=(None, 0, 0, 0))(params, caches, tokens,
+                                                     positions)
+
+        self._decode_fn = jax.jit(_batched, donate_argnums=(1,))
+
+        # -- slot state (loop thread only) --
+        S = self.max_batch
+        self._slots: List[Optional[Request]] = [None] * S
+        self._draining: Set[int] = set()      # token budget met, step in flight
+        self._pos = np.zeros(S, np.int32)     # next write position per slot
+        self._cache: Any = None               # stacked per-slot caches (S, ...)
+        self._tokens: Any = None              # next input tokens (S, 1, 1)
+        self._inflight = 0                    # dispatched, not-yet-complete steps
+        self._retired: List[Request] = []
+        self._lock = threading.Lock()         # guards _retired for readers
+        self.stats = {"steps": 0, "prefills": 0, "retired": 0,
+                      "slot_steps": 0, "padded_steps": 0, "cancelled": 0}
+
+    # ------------------------------------------------------------- clients
+    def submit(self, request: Request) -> Request:
+        """Thread-safe request intake (delegates to the Batcher CR)."""
+        return self.batcher.submit(request)
+
+    def close_intake(self) -> None:
+        self.batcher.close()
+
+    @property
+    def retired(self) -> List[Request]:
+        with self._lock:
+            return list(self._retired)
+
+    # ---------------------------------------------------------- slot state
+    def _ensure_state(self) -> None:
+        if self._cache is not None:
+            return
+        base = lm.init_cache(self.cfg, 1, self.max_cache_len)
+        self._cache = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * self.max_batch), base)
+        self._tokens = jnp.zeros((self.max_batch, 1, 1), jnp.int32)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._slots) if r is None]
+
+    @property
+    def active(self) -> int:
+        return sum(1 for r in self._slots if r is not None)
+
+    # ------------------------------------------------------------ admission
+    def _admit(self) -> int:
+        free = self._free_slots()
+        reqs = self.batcher.admit(len(free))
+        for req in reqs:
+            slot = free.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache1 = self._prefill_fn(self.params, {"tokens": prompt})
+            first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)  # (1,)
+            req.push_device_token(first[0])
+            self.stats["prefills"] += 1
+            if req.remaining == 0:
+                # single-token request: prefill answers it outright; it
+                # never occupies a decode slot
+                free.insert(0, slot)
+                self.engine.continue_when(ArrayOp(first),
+                                          self._on_prefill_done,
+                                          (req, True), cr=self.cr_steps)
+                continue
+            self._ensure_state()
+            self._cache = jax.tree_util.tree_map(
+                lambda sc, pc: sc.at[slot].set(pc), self._cache, cache1)
+            self._tokens = self._tokens.at[slot].set(first[:, None])
+            self._pos[slot] = prompt.shape[1]
+            self._slots[slot] = req
+            self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
+                                      (req, False), cr=self.cr_steps)
+        return len(reqs)
+
+    def _on_prefill_done(self, statuses, meta: Tuple[Request, bool]) -> None:
+        req, retire_now = meta
+        req.on_first_token()
+        if retire_now:
+            self._retire(req)
+
+    # --------------------------------------------------------------- decode
+    def _dispatch_step(self) -> bool:
+        live = [(i, r) for i, r in enumerate(self._slots)
+                if r is not None and i not in self._draining]
+        # drop cancellations before paying for a step
+        for i, r in list(live):
+            if r.req_state is RequestState.CANCELLED:
+                self._slots[i] = None
+                self.stats["cancelled"] += 1
+                live.remove((i, r))
+        if not live:
+            return False
+        logits, self._cache = self._decode_fn(
+            self.params, self._cache, self._tokens, jnp.asarray(self._pos))
+        # per-slot logits are (1, 1, V); stacked (S, 1, 1, V)
+        nxt = jnp.argmax(logits[:, :, -1, :], axis=-1).astype(jnp.int32)
+        self._tokens = nxt[..., None]                       # (S, 1, 1)
+        finishing: List[Tuple[int, Request]] = []
+        for i, r in live:
+            r.push_device_token(nxt[i, 0])
+            self._pos[i] += 1
+            if r.remaining == 0:
+                self._draining.add(i)
+                finishing.append((i, r))
+        self._inflight += 1
+        self.stats["steps"] += 1
+        self.stats["slot_steps"] += len(live)
+        self.stats["padded_steps"] += self.max_batch - len(live)
+        self.engine.continue_when(ArrayOp(nxt), self._on_step_done,
+                                  finishing, cr=self.cr_steps)
+        return True
+
+    def _on_step_done(self, statuses,
+                      finishing: List[Tuple[int, Request]]) -> None:
+        self._inflight -= 1
+        for slot, req in finishing:
+            self._slots[slot] = None
+            self._draining.discard(slot)
+            self._retire(req)
+
+    def _retire(self, req: Request) -> None:
+        if req.req_state is RequestState.CANCELLED:
+            return
+        req.retire()
+        with self._lock:
+            self._retired.append(req)
+        self.stats["retired"] += 1
+
+    # ----------------------------------------------------------------- loop
+    def step(self) -> bool:
+        """One loop iteration: admit, dispatch (windowed), progress.
+
+        Returns True if any work was started or completed.
+        """
+        admitted = self._admit()
+        dispatched = False
+        if self._inflight < self.max_inflight:
+            dispatched = self._dispatch_step()
+        before = self.stats["retired"]
+        self.engine.tick()   # discover step completions, run continuations
+        return bool(admitted) or dispatched or \
+            self.stats["retired"] != before
+
+    @property
+    def idle(self) -> bool:
+        """Nothing queued, occupied, or in flight — including prefill/step
+        continuations still registered on the step CR (a single-token
+        request's whole life is one prefill continuation)."""
+        return (not self._pending_intake() and self.active == 0
+                and self._inflight == 0
+                and self.cr_steps.active_count == 0)
+
+    def _pending_intake(self) -> bool:
+        return bool(self.batcher.queued or self.batcher.cr.active_count)
+
+    def run(self, timeout: Optional[float] = None,
+            idle_sleep: float = 5e-5, until=None) -> List[Request]:
+        """Drive the loop until intake is closed and everything retired
+        (or until the ``until()`` predicate flips true, when given —
+        benchmarks use it to serve a fixed workload on a warm engine)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        done = until if until is not None else \
+            (lambda: self.batcher.closed and self.idle)
+        while not done():
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"serve loop timed out: active={self.active} "
+                    f"inflight={self._inflight} queued={self.batcher.queued}")
+            if not self.step():
+                time.sleep(idle_sleep)
+        return self.retired
+
+    def metrics(self) -> dict:
+        out = summarize(self.retired)
+        out.update(self.stats)
+        return out
+
+    def shutdown(self) -> None:
+        self.batcher.close()
+        if self._own_engine:
+            self.engine.shutdown()
+
+
+def serve_requests(cfg: ModelConfig, params: Any,
+                   requests: Sequence[Request], *,
+                   max_batch: int = 4, max_cache_len: int = 256,
+                   timeout: float = 300.0,
+                   **kwargs: Any) -> List[Request]:
+    """Convenience: serve a fixed request list to completion, in order."""
+    eng = ServeEngine(cfg, params, max_batch=max_batch,
+                      max_cache_len=max_cache_len, **kwargs)
+    try:
+        for r in requests:
+            eng.submit(r)
+        eng.close_intake()
+        eng.run(timeout=timeout)
+    finally:
+        eng.shutdown()
+    return list(requests)

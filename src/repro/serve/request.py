@@ -1,0 +1,162 @@
+"""Serving request lifecycle — each request is itself a ``Completable``.
+
+A ``Request`` moves through::
+
+    QUEUED ──admit──▶ PREFILLING ──first token──▶ DECODING ──retire──▶ FINISHED
+       │                                                          ▲
+       └────────────────────────cancel────────────────────────────┘
+
+Because a ``Request`` is a ``Completable``, callers interact with it
+exactly like any other operation in this runtime: attach a continuation
+(``engine.continue_when(request, on_done, cr=cr)``), group several into a
+``continue_all``, or block with ``request.wait()``. Completion status
+carries the generated token ids as payload.
+
+Timing fields feed the serving metrics (benchmarks and tests): arrival,
+admission, first-token (TTFT), and finish timestamps.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import threading
+import time
+from typing import Any, List, Optional, Sequence
+
+from repro.core.completable import Completable
+from repro.core.status import OpState, Status
+
+_req_ids = itertools.count()
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"            # submitted, not yet admitted to a slot
+    PREFILLING = "prefilling"    # prompt being processed
+    DECODING = "decoding"        # in a decode slot, generating
+    FINISHED = "finished"        # all tokens generated (op COMPLETE)
+    CANCELLED = "cancelled"      # cancelled before finishing
+
+
+class Request(Completable):
+    """One generation request: prompt in, ``max_new_tokens`` greedy tokens out.
+
+    ``prompt`` is a 1-D int sequence (list/np/jnp). Generated token ids
+    accumulate in ``tokens`` (host ints, materialized at retirement).
+    """
+
+    def __init__(self, prompt: Any, max_new_tokens: int,
+                 *, arrival_time: Optional[float] = None) -> None:
+        super().__init__()
+        self.req_id = next(_req_ids)
+        self.prompt = prompt
+        self.max_new_tokens = int(max_new_tokens)
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        self.req_state = RequestState.QUEUED
+        self.tokens: List[int] = []
+        # device-side per-step token refs; drained into .tokens at retirement
+        self._device_tokens: List[Any] = []
+        self._finished_evt = threading.Event()
+        # -- timing (monotonic seconds) --
+        self.arrival_time = (time.monotonic() if arrival_time is None
+                             else arrival_time)
+        self.admit_time: Optional[float] = None
+        self.first_token_time: Optional[float] = None
+        self.finish_time: Optional[float] = None
+
+    # ------------------------------------------------------------- lifecycle
+    def on_admitted(self) -> None:
+        self.req_state = RequestState.PREFILLING
+        self.admit_time = time.monotonic()
+
+    def on_first_token(self) -> None:
+        if self.first_token_time is None:
+            self.first_token_time = time.monotonic()
+        self.req_state = RequestState.DECODING
+
+    def push_device_token(self, token: Any) -> None:
+        """Record one generated token (may still be an in-flight device
+        scalar; materialized lazily at retirement)."""
+        self._device_tokens.append(token)
+
+    @property
+    def generated(self) -> int:
+        return len(self._device_tokens)
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - self.generated
+
+    def retire(self) -> None:
+        """Finish the request: materialize tokens, publish completion."""
+        self.tokens = [int(t) for t in self._device_tokens]
+        self._device_tokens = []
+        self.req_state = RequestState.FINISHED
+        self.finish_time = time.monotonic()
+        self._finished_evt.set()
+        self._complete(Status(payload=self.tokens, count=len(self.tokens)))
+
+    def cancel(self) -> bool:
+        """Cancel a not-yet-finished request (best effort: queued requests
+        are dropped by the batcher; in-flight slots retire at the next
+        step boundary)."""
+        if self.req_state is RequestState.FINISHED:
+            return False
+        fired = self._complete(Status(cancelled=True), OpState.CANCELLED)
+        if fired:
+            self.req_state = RequestState.CANCELLED
+            self.finish_time = time.monotonic()
+            self._finished_evt.set()
+        return fired
+
+    # --------------------------------------------------------- completable
+    @property
+    def supports_push(self) -> bool:
+        return True    # retire()/cancel() publish completion
+
+    def _poll(self) -> bool:
+        return self._finished_evt.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block the *caller* until finished (the engine loop never does)."""
+        return self._finished_evt.wait(timeout)
+
+    # -------------------------------------------------------------- metrics
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token, from arrival (seconds)."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    def __repr__(self) -> str:
+        return (f"Request(id={self.req_id}, state={self.req_state.value}, "
+                f"generated={self.generated}/{self.max_new_tokens})")
+
+
+def summarize(requests: Sequence[Request]) -> dict:
+    """Aggregate serving metrics over finished requests."""
+    done = [r for r in requests if r.req_state is RequestState.FINISHED]
+    ttfts = sorted(r.ttft for r in done if r.ttft is not None)
+    total_tokens = sum(len(r.tokens) for r in done)
+    out = {
+        "finished": len(done),
+        "total_tokens": total_tokens,
+        "ttft_mean": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+        "ttft_p50": _percentile(ttfts, 0.50),
+        "ttft_p99": _percentile(ttfts, 0.99),
+    }
+    return out
+
+
+def _percentile(sorted_vals: Sequence[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]

@@ -16,7 +16,11 @@ Invariants (paper Fig. 1 + §2.2/§3):
 """
 import threading
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (pip install hypothesis)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import CRState, Engine, Status
 from repro.core.completable import Completable

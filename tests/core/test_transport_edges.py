@@ -1,0 +1,145 @@
+"""Transport edge cases: wildcard matching order, cancel-vs-match races,
+and rendezvous completion (satellite coverage for the messaging layer)."""
+import threading
+
+import pytest
+
+from repro.core import ANY_SOURCE, ANY_TAG, OpState, Transport
+
+
+# ------------------------------------------------------ wildcard ordering
+def test_wildcard_recv_matches_posted_order():
+    """A send must match the FIRST posted recv it satisfies, even when a
+    wildcard recv was posted ahead of a more specific one."""
+    tr = Transport(2)
+    r_any = tr.irecv(1, source=ANY_SOURCE, tag=ANY_TAG)
+    r_spec = tr.irecv(1, source=0, tag=4)
+    tr.isend(0, 1, 4, b"m1")
+    assert r_any.done()               # posted first, wins the match
+    assert not r_spec.done()
+    assert r_any.status.tag == 4
+    tr.isend(0, 1, 4, b"m2")
+    assert r_spec.done()
+    assert r_spec.status.payload == b"m2"
+
+
+def test_wildcard_source_only_and_tag_only():
+    tr = Transport(3)
+    r_src = tr.irecv(2, source=ANY_SOURCE, tag=9)      # any source, tag 9
+    r_tag = tr.irecv(2, source=1, tag=ANY_TAG)         # source 1, any tag
+    tr.isend(1, 2, 5, b"tagged5")     # only r_tag matches (tag 9 required)
+    assert r_tag.done() and not r_src.done()
+    assert r_tag.status.source == 1 and r_tag.status.tag == 5
+    tr.isend(0, 2, 9, b"tagged9")
+    assert r_src.done()
+    assert r_src.status.source == 0
+
+
+def test_wildcard_recv_drains_unexpected_in_arrival_order():
+    """ANY/ANY receives must consume unexpected messages FIFO (MPI
+    non-overtaking per (src,dst,tag) — and our single mailbox keeps total
+    arrival order)."""
+    tr = Transport(2)
+    for i in range(4):
+        tr.isend(0, 1, 10 + i, i)
+    got = [tr.irecv(1, source=ANY_SOURCE, tag=ANY_TAG).status.payload
+           for i in range(4)]
+    assert got == [0, 1, 2, 3]
+
+
+def test_specific_recv_skips_nonmatching_unexpected():
+    tr = Transport(2)
+    tr.isend(0, 1, 1, b"first")
+    tr.isend(0, 1, 2, b"second")
+    r = tr.irecv(1, source=0, tag=2)       # must skip the tag-1 message
+    assert r.done() and r.status.payload == b"second"
+    r1 = tr.irecv(1)
+    assert r1.done() and r1.status.payload == b"first"
+
+
+# ------------------------------------------------------- cancel-vs-match
+def test_cancel_vs_match_race_exactly_one_outcome():
+    """Racing cancel() against a matching isend: exactly one of them wins,
+    and the message is never lost — if the cancel wins, the payload stays
+    available for a later receive."""
+    n_iters = 200
+    for i in range(n_iters):
+        tr = Transport(2)
+        recv = tr.irecv(1, source=0, tag=7)
+        start = threading.Barrier(2)
+        cancel_result = [None]
+
+        def canceller():
+            start.wait()
+            cancel_result[0] = recv.cancel()
+
+        def sender():
+            start.wait()
+            tr.isend(0, 1, 7, i)
+
+        ts = [threading.Thread(target=canceller),
+              threading.Thread(target=sender)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        if cancel_result[0]:
+            assert recv.state is OpState.CANCELLED
+            assert recv.status.test_cancelled()
+            late = tr.irecv(1, source=0, tag=7)   # message not lost
+            assert late.done() and late.status.payload == i
+        else:
+            assert recv.done()
+            assert recv.status.payload == i
+            assert recv.state is not OpState.CANCELLED
+
+
+def test_cancel_after_unexpected_match_is_noop():
+    tr = Transport(2)
+    tr.isend(0, 1, 3, b"early")           # lands unexpected
+    recv = tr.irecv(1, source=0, tag=3)   # matches immediately on post
+    assert recv.done()
+    assert recv.cancel() is False
+    assert recv.status.payload == b"early"
+
+
+def test_double_cancel_is_idempotent():
+    tr = Transport(2)
+    recv = tr.irecv(1, source=0, tag=3)
+    assert recv.cancel() is True
+    assert recv.cancel() is False          # already removed + completed
+    assert recv.state is OpState.CANCELLED
+
+
+# ----------------------------------------------------------- rendezvous
+def test_rendezvous_completes_only_on_matching_recv():
+    tr = Transport(2, eager_threshold=8)
+    send = tr.isend(0, 1, 5, b"x" * 64)          # rendezvous-sized
+    assert not send.done()
+    tr.irecv(1, source=0, tag=6)                 # wrong tag: no match
+    assert not send.done()
+    tr.irecv(1, source=ANY_SOURCE, tag=5)        # matches
+    assert send.done()
+    assert send.status.count == 64
+
+
+def test_rendezvous_ignores_cancelled_recv():
+    tr = Transport(2, eager_threshold=8)
+    recv = tr.irecv(1, source=0, tag=5)
+    assert recv.cancel() is True
+    send = tr.isend(0, 1, 5, b"y" * 64)
+    assert not send.done()                 # cancelled recv must not match
+    r2 = tr.irecv(1, source=0, tag=5)
+    assert send.done() and r2.done()
+    assert r2.status.payload == b"y" * 64
+
+
+def test_eager_vs_rendezvous_threshold_boundary():
+    tr = Transport(2, eager_threshold=16)
+    eager = tr.isend(0, 1, 1, b"e" * 16)         # == threshold: eager
+    assert eager.done()
+    rendez = tr.isend(0, 1, 1, b"r" * 17)        # > threshold: rendezvous
+    assert not rendez.done()
+    got = [tr.irecv(1, tag=1).status.payload for _ in range(2)]
+    assert got == [b"e" * 16, b"r" * 17]         # FIFO preserved
+    assert rendez.done()

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (pip install hypothesis)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.flash_attention import kernel as fa_kernel, ref as fa_ref
 from repro.kernels.rmsnorm import kernel as rn_kernel, ref as rn_ref
