@@ -484,8 +484,10 @@ def bench_serve() -> None:
     useful_tokens = sum(lengths)
 
     # ---- continuous batching (continuation-driven) ----
+    # dense slots: this block isolates the scheduling win; the memory win
+    # is measured separately by bench_serve_paged (dense vs paged pool)
     serve = ServeEngine(cfg, params, max_batch=n_slots,
-                        max_cache_len=cache_len)
+                        max_cache_len=cache_len, paged=False)
     # warm the compile caches on the same engine instance
     warm = [Request(prompts[0], 2), Request(prompts[1], 2)]
     for r in warm:
@@ -579,10 +581,148 @@ def bench_serve() -> None:
     print("# wrote BENCH_serve.json", flush=True)
 
 
+# ============================= beyond paper: paged KV cache + prefix reuse
+def bench_serve_paged() -> None:
+    """Dense per-slot cache vs paged pool at EQUAL cache memory.
+
+    Dense pre-allocates ``n_slots × cache_len`` tokens of KV; paged holds
+    the same token budget as a shared page pool, so shorter-than-worst-case
+    sequences and a shared prompt prefix translate into more concurrent
+    slots (effective batch) and higher tokens/s on the same bursty trace.
+    Appends a ``paged`` block to BENCH_serve.json.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve import Request, ServeEngine
+    from repro.serve.request import _percentile
+
+    cfg = get_config("paper_demo", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+
+    # workload: shared system prefix + unique 4-token tail per request
+    # (the prefix-cache regime: every request after the first maps the
+    # full shared page and runs only the tail through one chunked
+    # suffix-prefill call). Bursty arrivals, varied output lengths. On
+    # CPU decode compute scales linearly with batch, so tokens/s is
+    # load-noisy around 1-2x — the stable structural win at equal cache
+    # memory is the 2x effective batch (on accelerators, where batch
+    # amortizes, the tokens/s follows it).
+    n_requests = 8 if QUICK else 16
+    page_size, prompt_len, shared_len = 8, 16, 12
+    dense_slots, dense_cache_len = 4, 64              # 256 cached tokens
+    paged_slots, total_pages, max_seq = 8, 31, 48     # 31+1 scratch = 256
+    lengths = [(4 + 6 * (i % 5)) for i in range(n_requests)]      # 4..28
+    burst = min(n_requests, 2 * dense_slots)
+    arrivals = [0.0] * burst + [0.03 * (i + 1)
+                                for i in range(n_requests - burst)]
+    common = jax.random.randint(jax.random.PRNGKey(2), (shared_len,), 0,
+                                cfg.vocab_size)
+    tails = jax.random.randint(jax.random.PRNGKey(3),
+                               (n_requests, prompt_len - shared_len), 0,
+                               cfg.vocab_size)
+    prompts = [jnp.concatenate([common, tails[i]]) for i in range(n_requests)]
+    useful_tokens = sum(lengths)
+    # warm prompts: same shapes, disjoint tokens (released pages drop out
+    # of the prefix index, so the measured run still sees one cold miss)
+    warm_prompts = jax.random.randint(jax.random.PRNGKey(4),
+                                      (2, prompt_len), 0, cfg.vocab_size)
+
+    def run_variant(**engine_kwargs):
+        serve = ServeEngine(cfg, params, **engine_kwargs)
+        warm = [Request(warm_prompts[0], 2),
+                Request(jnp.concatenate([warm_prompts[0][:shared_len],
+                                         warm_prompts[1][shared_len:]]), 2)]
+        for r in warm:                      # warms prefill+decode+suffix
+            serve.submit(r)
+        serve.run(until=lambda: len(serve.retired) == 2, timeout=120)
+        # drop warm-phase counters so the reported metrics (including the
+        # one deliberate warm prefix hit) reflect only the measured trace
+        serve.stats.update(max_active=0, deferred=0)
+        if serve.paged:
+            serve.pool.stats.update(prefix_hits=0, prefix_tokens_reused=0,
+                                    peak_in_use=serve.pool.pages_in_use)
+
+        reqs = [Request(prompts[i], lengths[i]) for i in range(n_requests)]
+        t0 = time.monotonic()
+
+        def submitter():
+            for req, dt in zip(reqs, arrivals):
+                now = time.monotonic() - t0
+                if dt > now:
+                    time.sleep(dt - now)
+                req.arrival_time = time.monotonic()
+                serve.submit(req)
+
+        sub = threading.Thread(target=submitter)
+        sub.start()
+        serve.run(until=lambda: len(serve.retired) == 2 + n_requests,
+                  timeout=300)
+        sub.join()
+        makespan = max(r.finish_time for r in reqs) - t0
+        out = {
+            "tokens_per_s": useful_tokens / makespan,
+            "makespan_s": makespan,
+            "ttft_p50_s": _percentile(sorted(r.ttft for r in reqs), 0.50),
+            "ttft_p99_s": _percentile(sorted(r.ttft for r in reqs), 0.99),
+            "effective_batch": serve.stats["max_active"],
+            "cached_tokens_budget": (dense_slots * dense_cache_len),
+        }
+        m = serve.metrics()
+        if m.get("paged"):
+            out.update({k: m[k] for k in ("prefix_hits",
+                                          "prefix_tokens_reused",
+                                          "peak_in_use", "total_pages",
+                                          "page_size", "deferred")})
+        serve.shutdown()
+        return out
+
+    dense = run_variant(max_batch=dense_slots, max_cache_len=dense_cache_len,
+                        paged=False)
+    paged = run_variant(max_batch=paged_slots, max_cache_len=dense_cache_len,
+                        paged=True, page_size=page_size,
+                        max_seq_len=max_seq, total_pages=total_pages)
+
+    emit("serve.paged.dense_baseline",
+         dense["makespan_s"] / useful_tokens * 1e6,
+         f"{dense['tokens_per_s']:.0f}_tok_per_s_batch{dense['effective_batch']}")
+    emit("serve.paged.paged_pool",
+         paged["makespan_s"] / useful_tokens * 1e6,
+         f"{paged['tokens_per_s']:.0f}_tok_per_s_batch{paged['effective_batch']}"
+         f"_hits{paged['prefix_hits']}")
+    emit("serve.paged.effective_batch", 0.0,
+         f"{paged['effective_batch'] / dense['effective_batch']:.2f}x"
+         f"_at_{dense_slots * dense_cache_len}_cached_tokens")
+    emit("serve.paged.speedup", 0.0,
+         f"{paged['tokens_per_s'] / dense['tokens_per_s']:.3f}x")
+
+    try:
+        with open("BENCH_serve.json") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        doc = {}
+    doc["paged"] = {
+        "workload": {"n_requests": n_requests, "prompt_len": prompt_len,
+                     "shared_prefix_len": shared_len, "lengths": lengths,
+                     "arrivals_s": arrivals,
+                     "cached_tokens_budget": dense_slots * dense_cache_len},
+        "dense": dense, "paged": paged,
+        "effective_batch_ratio":
+            paged["effective_batch"] / dense["effective_batch"],
+        "speedup_tokens_per_s":
+            paged["tokens_per_s"] / dense["tokens_per_s"],
+    }
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(doc, f, indent=2)
+    print("# appended paged block to BENCH_serve.json", flush=True)
+
+
 ALL_BENCHES = (bench_notification, bench_scheduler, bench_zones,
                bench_dataflow, bench_offload, bench_loc,
-               bench_train_overlap, bench_serve)
-QUICK_BENCHES = (bench_notification, bench_scheduler, bench_loc, bench_serve)
+               bench_train_overlap, bench_serve, bench_serve_paged)
+QUICK_BENCHES = (bench_notification, bench_scheduler, bench_loc, bench_serve,
+                 bench_serve_paged)
 
 
 def main() -> None:

@@ -1,0 +1,60 @@
+"""Version-compat shims for JAX API drift.
+
+The repo runs on whatever JAX build the image bakes in; these helpers
+paper over the API moves between the 0.4.x line and newer releases so
+the same source works on both:
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map`` to
+  ``jax.shard_map``, and its replication-check kwarg was renamed
+  ``check_rep`` → ``check_vma`` along the way.
+* ``jax.sharding.AxisType`` (explicit mesh axis types) does not exist on
+  older builds, where ``jax.make_mesh`` also rejects an ``axis_types``
+  kwarg; meshes there are implicitly Auto on every axis, which is the
+  behaviour we want anyway.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+import jax
+
+try:  # new-style top-level export
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # pinned 0.4.x line
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_PARAMS = frozenset(
+    inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+              check_vma: bool = True, **kwargs: Any):
+    """``shard_map`` accepting the ``check_vma`` spelling on every JAX."""
+    if "check_vma" in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = check_vma
+    elif "check_rep" in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """Flat cost-analysis dict on every JAX build.
+
+    Older builds return a one-element list of per-program dicts from
+    ``Compiled.cost_analysis()``; newer ones return the dict directly.
+    """
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def make_mesh(shape, axes, **kwargs: Any):
+    """``jax.make_mesh`` that passes Auto ``axis_types`` only where the
+    build supports them (older builds are implicitly Auto)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs.setdefault("axis_types", (axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **kwargs)

@@ -215,7 +215,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, exact: bool,
             ma.argument_size_in_bytes + ma.output_size_in_bytes
             + ma.temp_size_in_bytes - ma.alias_size_in_bytes < 16e9),
     }
-    ca = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis
+    ca = cost_analysis(compiled)
     n_rep = prog["n_repeat"]
     flops_dev = float(ca.get("flops", 0.0)) * n_rep
     bytes_dev = float(ca.get("bytes accessed", 0.0)) * n_rep

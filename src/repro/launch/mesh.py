@@ -9,15 +9,13 @@ dry-run proves cross-pod gradient reduction shards.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
@@ -25,6 +23,4 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
     """Small mesh for CI-scale dry-run tests (8 virtual devices)."""
     shape = (2, n_data, n_model) if multi_pod else (n_data, n_model)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

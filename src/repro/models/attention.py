@@ -157,10 +157,13 @@ def prefill_attention(params, x, cfg: ModelConfig, cache: Dict[str, Any],
 
 def decode_attention(params, x, cfg: ModelConfig, cache: Dict[str, Any],
                      pos: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
-    """One-token decode against a cache of length L.
+    """Decode ``S1`` new tokens against a cache of length L (usually
+    S1 == 1; the paged suffix-prefill step passes a whole prompt tail —
+    positions ``pos .. pos+S1-1`` — in one call, "chunked prefill").
 
-    ``pos``: scalar int32, absolute position of the new token. For SWA the
-    cache is a ring buffer of size ``window`` indexed by ``pos % window``.
+    ``pos``: scalar int32, absolute position of the first new token. For
+    SWA the cache is a ring buffer of size ``window`` indexed by
+    ``pos % window`` (single-token only).
 
     GQA is computed with *grouped einsums* — the cache is never repeated to
     the query-head count (a 16× cache blowup at 32k otherwise). Sharding is
@@ -169,8 +172,12 @@ def decode_attention(params, x, cfg: ModelConfig, cache: Dict[str, Any],
     small per-layer all-reduces, and activation heads stay replicated
     ("act_heads" → None in decode rule tables).
     """
-    B, S1, _ = x.shape        # S1 == 1
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    B, S1, _ = x.shape
+    if cfg.window and S1 > 1:
+        raise NotImplementedError(
+            "multi-token decode against a SWA ring buffer")
+    offs = jnp.arange(S1, dtype=jnp.int32)
+    positions = pos + offs[None, :]                     # (1, S1), broadcast
     q, k, v = _project_qkv(params, x, cfg, positions)
     q = constrain(q, "batch", None, "act_heads", None)
     L = cache["k"].shape[1]
@@ -182,17 +189,18 @@ def decode_attention(params, x, cfg: ModelConfig, cache: Dict[str, Any],
     KVp = cfg.padded_kv_heads
     G = cfg.padded_heads // KVp
     qg = q.reshape(B, S1, KVp, G, -1)
-    # masking by absolute position held in each slot
+    # causal masking by absolute position held in each slot, per query row
     idx = jnp.arange(L, dtype=jnp.int32)
     if cfg.window:
         # slot i holds the latest absolute position ≤ pos congruent to i
         abs_pos = idx + ((pos - idx) // L) * L
-        valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - cfg.window)
+        valid = ((abs_pos >= 0) & (abs_pos <= pos)
+                 & (abs_pos > pos - cfg.window))[None, :]
     else:
-        valid = idx <= pos
+        valid = idx[None, :] <= (pos + offs)[:, None]          # (S1, L)
     scores = jnp.einsum("bskgd,btkd->bkgst", qg, ck).astype(jnp.float32) \
         * cfg.resolved_head_dim ** -0.5
-    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    scores = jnp.where(valid[None, None, None, :, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(cfg.dtype)
     o = jnp.einsum("bkgst,btkd->bskgd", probs, cv)
     o = o.reshape(B, S1, cfg.padded_heads, -1)

@@ -92,14 +92,19 @@ def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
                 if depth == 0:
                     break
         operands = tail[paren + 1:j]
-        total = 0
-        for opnd in operands.split(","):
-            opnd = opnd.strip().lstrip("%")
-            opnd = opnd.split(" ")[0]
-            if opnd in sym:
-                total += sym[opnd]
-            else:
-                total += _shape_bytes(opnd)
+        # Operand spelling differs across XLA text dumps: typed
+        # ``f32[2,8]{1,0} %name`` (each operand carries its shape — sum the
+        # shapes directly; a comma-split would break inside the dims) vs
+        # untyped ``%name`` (resolve through the symbol table).
+        total = _shape_bytes(operands)
+        if total == 0:
+            for opnd in operands.split(","):
+                opnd = opnd.strip().lstrip("%")
+                opnd = opnd.split(" ")[0]
+                if opnd in sym:
+                    total += sym[opnd]
+                else:
+                    total += _shape_bytes(opnd)
         out[kind]["count"] += 1
         out[kind]["bytes"] += float(total)
     return out

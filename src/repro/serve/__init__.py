@@ -9,18 +9,26 @@ Layers:
   ``Completable`` so callers attach continuations to completions.
 * ``serve.batcher`` — thread-safe admission on a ``poll_only +
   enqueue_complete`` CR; bursts queue without preempting the decode loop.
+* ``serve.kv_cache`` — paged KV block pool: free-list page allocation,
+  per-request page tables, and content-hashed prefix reuse (shared pages
+  are mapped read-only; the mutable tail page is always private).
 * ``serve.engine``  — the continuous-batching decode loop where each
   step's ``jax.Array`` outputs are ``ArrayOp``s whose continuations
   re-enqueue or retire sequences, overlapping prefill with in-flight
-  decode.
+  decode. Paged by default where the model family supports it.
 """
 from repro.serve.batcher import Batcher
 from repro.serve.engine import ServeEngine, serve_requests
+from repro.serve.kv_cache import PagePool, paged_supported, pages_for
 from repro.serve.request import Request, RequestState, summarize
 from repro.serve.steps import (greedy_generate, make_decode_step,
+                               make_paged_decode_step,
+                               make_paged_suffix_step, make_prefill_scatter,
                                make_prefill_step)
 
 __all__ = [
     "Batcher", "ServeEngine", "serve_requests", "Request", "RequestState",
     "summarize", "greedy_generate", "make_decode_step", "make_prefill_step",
+    "PagePool", "paged_supported", "pages_for", "make_paged_decode_step",
+    "make_paged_suffix_step", "make_prefill_scatter",
 ]

@@ -49,29 +49,41 @@ class Batcher:
         # only mutated by admission callbacks, i.e. inside cr.test() on the
         # decode-loop thread
         self._pending: collections.deque[Request] = collections.deque()
-        self._closed = threading.Event()
-        self.stats = {"submitted": 0, "admitted": 0, "dropped_cancelled": 0}
+        # one mutex makes the closed-check and the CR registration atomic
+        # against close(): without it a submission racing close() could pass
+        # the check, then register on the CR of a closed batcher and sit
+        # there forever (the loop stops admitting once drained).
+        self._intake_lock = threading.Lock()
+        self._closed = False
+        self.stats = {"submitted": 0, "admitted": 0, "dropped_cancelled": 0,
+                      "refused_closed": 0}
 
     # ---------------------------------------------------------- client side
     def submit(self, request: Request) -> Request:
         """Enqueue a request (any thread). Returns the request for chaining."""
-        if self._closed.is_set():
-            raise RuntimeError("batcher intake is closed")
-        self.stats["submitted"] += 1
-        op = _SubmitOp()
-        op._complete(Status(payload=request))
-        # poll_only routes the ready continuation to the CR's private queue;
-        # nothing executes on this (client) thread.
-        self.engine.continue_when(op, self._on_submit, request, cr=self.cr)
+        with self._intake_lock:
+            if self._closed:
+                self.stats["refused_closed"] += 1
+                raise RuntimeError("batcher intake is closed")
+            self.stats["submitted"] += 1
+            op = _SubmitOp()
+            op._complete(Status(payload=request))
+            # poll_only routes the ready continuation to the CR's private
+            # queue; nothing executes on this (client) thread, so holding
+            # the lock across registration is cheap.
+            self.engine.continue_when(op, self._on_submit, request,
+                                      cr=self.cr)
         return request
 
     def close(self) -> None:
         """Stop accepting new submissions (already-queued ones still admit)."""
-        self._closed.set()
+        with self._intake_lock:
+            self._closed = True
 
     @property
     def closed(self) -> bool:
-        return self._closed.is_set()
+        with self._intake_lock:
+            return self._closed
 
     # ----------------------------------------------------------- loop side
     def _on_submit(self, statuses, request: Request) -> None:
@@ -94,6 +106,14 @@ class Batcher:
         self.stats["admitted"] += len(out)
         return out
 
+    def requeue(self, request: Request) -> None:
+        """Return an admitted-but-unplaceable request to the head of the
+        queue (loop thread only — the paged engine defers admission when
+        the page pool can't cover the request's worst-case footprint)."""
+        request.on_requeued()
+        self._pending.appendleft(request)
+        self.stats["admitted"] -= 1
+
     @property
     def queued(self) -> int:
         """Submissions already transferred to the pending list (does not
@@ -103,5 +123,5 @@ class Batcher:
     @property
     def drained(self) -> bool:
         """True when intake is closed and nothing is waiting for admission."""
-        return (self._closed.is_set() and not self._pending
+        return (self.closed and not self._pending
                 and self.cr.active_count == 0)

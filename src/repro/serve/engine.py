@@ -7,7 +7,7 @@ fixed set of *slots*, each holding one in-flight sequence with its own KV
 cache and position:
 
 * **decode** — one vmapped decode step advances every occupied slot by one
-  token (per-slot positions, donated stacked cache). The step's next-token
+  token (per-slot positions, donated cache). The step's next-token
   ``jax.Array`` is wrapped in an ``ArrayOp`` whose continuation does the
   bookkeeping when the device work *actually* finishes: records
   first-token latency, retires sequences that reached their token budget
@@ -21,6 +21,20 @@ cache and position:
 * **retirement** — a finished ``Request`` is itself a ``Completable``:
   its continuation fires for whoever attached one, and ``request.wait()``
   unblocks the submitting client.
+
+**Memory** comes in two flavours:
+
+* *paged* (default where supported, see ``serve.kv_cache``) — slots index
+  into a shared ``PagePool`` through per-request page tables; a request
+  holds ``ceil((prompt + max_new) / page_size)`` pages instead of a full
+  ``max_cache_len`` lane, so at equal pool memory the engine sustains a
+  larger effective batch. Prompts sharing a page-aligned prefix with a
+  resident request map those pages read-only and skip re-prefilling them;
+  pages return to the pool in the retirement continuation (the paper's
+  callback-driven lifecycle owns deallocation too).
+* *dense* (``paged=False``, and automatically for SSM/hybrid/audio/SWA
+  configs) — the original per-slot stacked cache, each slot padded to
+  ``max_cache_len``.
 
 Continuous batching beats static batching whenever output lengths vary or
 arrivals straggle: finished slots are refilled immediately instead of
@@ -40,8 +54,11 @@ from repro.core import ArrayOp, Engine, Scheduler
 from repro.models import lm
 from repro.models.common import AUDIO, ModelConfig
 from repro.serve.batcher import Batcher
+from repro.serve.kv_cache import PagePool, paged_supported, pages_for
 from repro.serve.request import Request, RequestState, summarize
-from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.serve.steps import (make_decode_step, make_paged_decode_step,
+                               make_paged_suffix_step, make_prefill_scatter,
+                               make_prefill_step)
 
 
 class ServeEngine:
@@ -52,6 +69,11 @@ class ServeEngine:
     by the loop thread — continuations registered here run on it because
     the CRs use the default ``thread=application`` policy and the loop is
     the only thread that calls into the engine.
+
+    Paged-mode knobs: ``page_size`` tokens per KV page, ``max_seq_len``
+    (prompt + generation bound per request, default ``max_cache_len``),
+    ``total_pages`` in the pool (default ``max_batch * ceil(max_seq_len /
+    page_size)`` — shrink it, or raise ``max_batch``, to oversubscribe).
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, *,
@@ -59,16 +81,27 @@ class ServeEngine:
                  max_cache_len: int = 256,
                  max_inflight: int = 2,
                  engine: Optional[Engine] = None,
-                 scheduler: Union[str, Scheduler] = "fifo") -> None:
+                 scheduler: Union[str, Scheduler] = "fifo",
+                 paged: Optional[bool] = None,
+                 page_size: int = 16,
+                 total_pages: Optional[int] = None,
+                 max_seq_len: Optional[int] = None) -> None:
         if cfg.family == AUDIO:
             raise NotImplementedError(
                 "ServeEngine drives token-in/token-out LM decode; audio "
                 "enc-dec serving still goes through serve.steps directly")
+        if paged is None:
+            paged = paged_supported(cfg)
+        elif paged and not paged_supported(cfg):
+            raise ValueError(
+                f"paged KV cache unsupported for {cfg.name!r} "
+                "(needs dense/MoE family, scan_layers, no sliding window)")
         self.cfg = cfg
         self.params = params
         self.max_batch = int(max_batch)
         self.max_cache_len = int(max_cache_len)
         self.max_inflight = max(1, int(max_inflight))
+        self.paged = bool(paged)
         self._own_engine = engine is None
         self.engine = engine if engine is not None else \
             Engine(scheduler=scheduler)
@@ -78,32 +111,71 @@ class ServeEngine:
         self.cr_steps = self.engine.continue_init(
             {"mpi_continue_enqueue_complete": True})
 
-        self._prefill_fn = jax.jit(make_prefill_step(cfg, self.max_cache_len))
-        decode_one = make_decode_step(cfg)
+        S = self.max_batch
+        self.pool: Optional[PagePool] = None
+        if self.paged:
+            self.page_size = int(page_size)
+            self.max_seq_len = int(max_seq_len or max_cache_len)
+            self.max_pages = pages_for(self.max_seq_len, self.page_size)
+            # padded gather width: every per-slot view is max_pages pages
+            self._padded_len = self.max_pages * self.page_size
+            n_pool = int(total_pages) if total_pages is not None \
+                else S * self.max_pages
+            self.pool = PagePool(cfg, n_pool, self.page_size)
+            self._tables = np.full((S, self.max_pages), self.pool.null_page,
+                                   np.int32)
+            self._prefill_fn = jax.jit(
+                make_prefill_step(cfg, self._padded_len))
+            self._decode_fn = jax.jit(
+                make_paged_decode_step(cfg, self.page_size),
+                donate_argnums=(1,))
+            self._suffix_fn = jax.jit(
+                make_paged_suffix_step(cfg, self.page_size),
+                donate_argnums=(1,))
+            self._scatter_fn = jax.jit(
+                make_prefill_scatter(cfg, self.page_size),
+                donate_argnums=(0,))
+        else:
+            self._prefill_fn = jax.jit(
+                make_prefill_step(cfg, self.max_cache_len))
+            decode_one = make_decode_step(cfg)
 
-        def _batched(params, caches, tokens, positions):
-            return jax.vmap(decode_one,
-                            in_axes=(None, 0, 0, 0))(params, caches, tokens,
-                                                     positions)
+            def _batched(params, caches, tokens, positions):
+                return jax.vmap(decode_one,
+                                in_axes=(None, 0, 0, 0))(params, caches,
+                                                         tokens, positions)
 
-        self._decode_fn = jax.jit(_batched, donate_argnums=(1,))
+            self._decode_fn = jax.jit(_batched, donate_argnums=(1,))
 
         # -- slot state (loop thread only) --
-        S = self.max_batch
         self._slots: List[Optional[Request]] = [None] * S
         self._draining: Set[int] = set()      # token budget met, step in flight
         self._pos = np.zeros(S, np.int32)     # next write position per slot
-        self._cache: Any = None               # stacked per-slot caches (S, ...)
+        self._cache: Any = None               # dense mode: stacked caches
         self._tokens: Any = None              # next input tokens (S, 1, 1)
         self._inflight = 0                    # dispatched, not-yet-complete steps
+        self._stalled_at: Optional[int] = None  # pages_in_use at last deferral
         self._retired: List[Request] = []
         self._lock = threading.Lock()         # guards _retired for readers
         self.stats = {"steps": 0, "prefills": 0, "retired": 0,
-                      "slot_steps": 0, "padded_steps": 0, "cancelled": 0}
+                      "slot_steps": 0, "padded_steps": 0, "cancelled": 0,
+                      "suffix_steps": 0, "suffix_tokens": 0, "deferred": 0,
+                      "max_active": 0}
 
     # ------------------------------------------------------------- clients
     def submit(self, request: Request) -> Request:
         """Thread-safe request intake (delegates to the Batcher CR)."""
+        if self.paged:
+            plen = int(np.asarray(request.prompt).reshape(-1).shape[0])
+            total = plen + request.max_new_tokens
+            if total > self.max_seq_len:
+                raise ValueError(
+                    f"request needs {total} tokens > max_seq_len="
+                    f"{self.max_seq_len}")
+            if pages_for(total, self.page_size) > self.pool.total_pages:
+                raise ValueError(
+                    f"request needs more pages than the pool holds "
+                    f"({self.pool.total_pages})")
         return self.batcher.submit(request)
 
     def close_intake(self) -> None:
@@ -116,12 +188,14 @@ class ServeEngine:
 
     # ---------------------------------------------------------- slot state
     def _ensure_state(self) -> None:
-        if self._cache is not None:
-            return
-        base = lm.init_cache(self.cfg, 1, self.max_cache_len)
-        self._cache = jax.tree_util.tree_map(
-            lambda x: jnp.stack([x] * self.max_batch), base)
-        self._tokens = jnp.zeros((self.max_batch, 1, 1), jnp.int32)
+        if self._tokens is None:
+            self._tokens = jnp.zeros((self.max_batch, 1, 1), jnp.int32)
+        if self.paged:
+            self.pool.ensure_arrays()
+        elif self._cache is None:
+            base = lm.init_cache(self.cfg, 1, self.max_cache_len)
+            self._cache = jax.tree_util.tree_map(
+                lambda x: jnp.stack([x] * self.max_batch), base)
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self._slots) if r is None]
@@ -132,32 +206,135 @@ class ServeEngine:
 
     # ------------------------------------------------------------ admission
     def _admit(self) -> int:
+        # after a capacity deferral, don't re-pop and re-hash the queue
+        # every loop spin — admission can only succeed once a retirement
+        # or cancellation has returned pages to the pool
+        if self._stalled_at is not None:
+            if self.pool.pages_in_use >= self._stalled_at:
+                return 0
+            self._stalled_at = None
         free = self._free_slots()
         reqs = self.batcher.admit(len(free))
-        for req in reqs:
-            slot = free.pop(0)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, cache1 = self._prefill_fn(self.params, {"tokens": prompt})
-            first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)  # (1,)
+        admitted = 0
+        for i, req in enumerate(reqs):
+            if not self._place(req, free):
+                # page pool can't cover the request's worst case yet:
+                # return it (and everything behind it, preserving arrival
+                # order) to the queue head; stats count stall events, not
+                # retries
+                self.stats["deferred"] += 1
+                self._stalled_at = self.pool.pages_in_use
+                for r in reversed(reqs[i:]):
+                    self.batcher.requeue(r)
+                break
+            admitted += 1
+        return admitted
+
+    def _place(self, req: Request, free: List[int]) -> bool:
+        """Prefill ``req`` and seat it in a slot. False = defer (paged
+        capacity); True = placed (or answered outright by prefill)."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        plen = prompt.shape[1]
+        if req.max_new_tokens == 1:
+            # single-token request: prefill answers it outright; it never
+            # occupies a decode slot (nor, in paged mode, any pages)
+            logits, _ = self._prefill_fn(self.params, {"tokens": prompt})
+            first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             req.push_device_token(first[0])
             self.stats["prefills"] += 1
-            if req.remaining == 0:
-                # single-token request: prefill answers it outright; it
-                # never occupies a decode slot
-                free.insert(0, slot)
-                self.engine.continue_when(ArrayOp(first),
-                                          self._on_prefill_done,
-                                          (req, True), cr=self.cr_steps)
-                continue
-            self._ensure_state()
+            self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
+                                      (req, True), cr=self.cr_steps)
+            return True
+
+        self._ensure_state()
+        if self.paged:
+            placed = self._prefill_paged(req, prompt)
+            if placed is None:
+                return False
+            first = placed
+        else:
+            logits, cache1 = self._prefill_fn(self.params, {"tokens": prompt})
+            first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+        slot = free.pop(0)
+        if not self.paged:
             self._cache = jax.tree_util.tree_map(
                 lambda sc, pc: sc.at[slot].set(pc), self._cache, cache1)
-            self._tokens = self._tokens.at[slot].set(first[:, None])
-            self._pos[slot] = prompt.shape[1]
-            self._slots[slot] = req
-            self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
-                                      (req, False), cr=self.cr_steps)
-        return len(reqs)
+        else:
+            self._tables[slot, :] = self.pool.null_page
+            self._tables[slot, :len(req.page_ids)] = req.page_ids
+        req.push_device_token(first[0])
+        self.stats["prefills"] += 1
+        self._tokens = self._tokens.at[slot].set(first[:, None])
+        self._pos[slot] = plen
+        self._slots[slot] = req
+        self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
+                                  (req, False), cr=self.cr_steps)
+        return True
+
+    def _prefill_paged(self, req: Request,
+                       prompt: jax.Array) -> Optional[jax.Array]:
+        """Allocate pages, reuse any cached prefix, fill the prompt KV.
+
+        Returns the first-token array (1,), or None when the pool can't
+        cover the worst-case footprint (defer — nothing was allocated)."""
+        pool, ps = self.pool, self.page_size
+        plen = prompt.shape[1]
+        n_pages = pages_for(plen + req.max_new_tokens, ps)
+        shared = pool.match_prefix(req.prompt)
+        owned = pool.alloc(n_pages - len(shared))
+        if owned is None:
+            return None
+        for p in shared:
+            pool.retain(p)
+        table = shared + owned
+        req.page_ids = table
+        req.shared_prefix_tokens = len(shared) * ps
+
+        if shared:
+            # prefix hit: shared pages already hold positions [0, m*ps);
+            # one chunked suffix-prefill call runs the remaining prompt
+            # tokens against them — the shared prefix is never recomputed
+            # and writes land in owned pages only (scatter table maps
+            # shared entries to the null page)
+            pool.stats["prefix_hits"] += 1
+            pool.stats["prefix_tokens_reused"] += len(shared) * ps
+            start = len(shared) * ps
+            tail = plen - start
+            scat = np.full(self.max_pages, pool.null_page, np.int32)
+            scat[len(shared):len(table)] = table[len(shared):]
+            # pad the tail to a page multiple so at most max_pages suffix
+            # shapes ever compile; pad rows are causally invisible to the
+            # real rows, and the garbage they write at positions >= plen
+            # is overwritten by the decode step for that position before
+            # anything attends to it
+            padded = pages_for(tail, ps) * ps
+            suffix = prompt[:, start:]
+            if padded != tail:
+                suffix = jnp.pad(suffix, ((0, 0), (0, padded - tail)))
+            logits, pool.arrays = self._suffix_fn(
+                self.params, pool.arrays, suffix, jnp.int32(start),
+                self._padded_table(table), jnp.asarray(scat))
+            self.stats["suffix_steps"] += 1
+            self.stats["suffix_tokens"] += tail
+            first = jnp.argmax(logits[:, tail - 1], axis=-1).astype(jnp.int32)
+        else:
+            # cold: dense prefill over the whole prompt, then blit the
+            # prompt pages into the pool in one scatter
+            logits, cache1 = self._prefill_fn(self.params, {"tokens": prompt})
+            first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            scatter_table = np.full(self.max_pages, pool.null_page, np.int32)
+            n_prompt_pages = pages_for(plen, ps)
+            scatter_table[:n_prompt_pages] = table[:n_prompt_pages]
+            pool.arrays = self._scatter_fn(pool.arrays, cache1,
+                                           jnp.asarray(scatter_table))
+        pool.register_prefix(req.prompt, table)
+        return first
+
+    def _padded_table(self, table: Sequence[int]) -> jax.Array:
+        out = np.full(self.max_pages, self.pool.null_page, np.int32)
+        out[:len(table)] = table
+        return jnp.asarray(out)
 
     def _on_prefill_done(self, statuses, meta: Tuple[Request, bool]) -> None:
         req, retire_now = meta
@@ -172,13 +349,19 @@ class ServeEngine:
         # drop cancellations before paying for a step
         for i, r in list(live):
             if r.req_state is RequestState.CANCELLED:
-                self._slots[i] = None
+                self._evict_slot(i, r)
                 self.stats["cancelled"] += 1
                 live.remove((i, r))
         if not live:
             return False
-        logits, self._cache = self._decode_fn(
-            self.params, self._cache, self._tokens, jnp.asarray(self._pos))
+        if self.paged:
+            logits, self.pool.arrays = self._decode_fn(
+                self.params, self.pool.arrays, self._tokens,
+                jnp.asarray(self._pos), jnp.asarray(self._tables))
+        else:
+            logits, self._cache = self._decode_fn(
+                self.params, self._cache, self._tokens,
+                jnp.asarray(self._pos))
         # per-slot logits are (1, 1, V); stacked (S, 1, 1, V)
         nxt = jnp.argmax(logits[:, :, -1, :], axis=-1).astype(jnp.int32)
         self._tokens = nxt[..., None]                       # (S, 1, 1)
@@ -193,6 +376,7 @@ class ServeEngine:
         self.stats["steps"] += 1
         self.stats["slot_steps"] += len(live)
         self.stats["padded_steps"] += self.max_batch - len(live)
+        self.stats["max_active"] = max(self.stats["max_active"], len(live))
         self.engine.continue_when(ArrayOp(nxt), self._on_step_done,
                                   finishing, cr=self.cr_steps)
         return True
@@ -201,14 +385,29 @@ class ServeEngine:
                       finishing: List[Tuple[int, Request]]) -> None:
         self._inflight -= 1
         for slot, req in finishing:
-            self._slots[slot] = None
             self._draining.discard(slot)
+            self._evict_slot(slot, req)
             self._retire(req)
 
+    def _evict_slot(self, slot: int, req: Request) -> None:
+        """Free a slot and return the request's pages to the pool (every
+        exit path — retirement, cancellation mid-decode or mid-drain —
+        funnels through here, so pages can never leak)."""
+        self._slots[slot] = None
+        self._pos[slot] = 0
+        if self.paged:
+            self._tables[slot, :] = self.pool.null_page
+        self._release_pages(req)
+
+    def _release_pages(self, req: Request) -> None:
+        if self.paged and req.page_ids:
+            self.pool.release(req.page_ids)
+            req.page_ids = []
+
     def _retire(self, req: Request) -> None:
-        if req.req_state is RequestState.CANCELLED:
+        if not req.retire():      # lost the race to a concurrent cancel()
+            self.stats["cancelled"] += 1
             return
-        req.retire()
         with self._lock:
             self._retired.append(req)
         self.stats["retired"] += 1
@@ -260,6 +459,9 @@ class ServeEngine:
     def metrics(self) -> dict:
         out = summarize(self.retired)
         out.update(self.stats)
+        out["paged"] = self.paged
+        if self.paged:
+            out.update(self.pool.metrics())
         return out
 
     def shutdown(self) -> None:

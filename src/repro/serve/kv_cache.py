@@ -1,0 +1,173 @@
+"""Paged KV-cache block pool with prefix reuse.
+
+Dense continuous batching still pads memory: every slot pre-allocates a
+full ``max_cache_len`` KV cache, so batch capacity is bounded by the
+worst-case sequence, not the actual ones (the same padding waste the
+paper's §5.3 burst handling removes from the *scheduling* side). The
+``PagePool`` removes it from the *memory* side:
+
+* **block pool** — one device allocation of ``total_pages`` fixed-size
+  pages per layer (``k``/``v``: ``(n_layers, total_pages + 1, page_size,
+  kv_heads, head_dim)``); a request only holds pages proportional to its
+  sequence, so the pool oversubscribes slots the way rtp-llm's block
+  cache manager does. Index ``total_pages`` is a scratch ("null") page:
+  page-table padding points at it, so idle slots and table tails
+  read/write garbage there instead of needing dynamic shapes.
+* **free-list allocation** — host-side free list + per-page refcounts.
+  Allocation is worst-case at admission (``ceil((prompt + max_new) /
+  page_size)`` pages), so decode never allocates mid-flight and can
+  never OOM; capacity-deferred requests are requeued at the head of the
+  batcher queue.
+* **prefix reuse** — full prompt pages are content-hashed (the page's
+  token prefix, chained from position 0). A new request whose prompt
+  starts with an already-resident prefix maps those pages read-only
+  (refcount++) and skips re-prefilling them. Sharing is restricted to
+  *full, immutable* pages — the partially-filled tail page is always
+  private — so the copy-on-write policy degenerates to "never write a
+  shared page": every write (suffix prefill and decode both append at
+  positions past the shared prefix) lands in pages the request owns.
+
+All mutation happens on the engine loop thread (single-consumer, like
+the slot state it feeds); no locking is needed here.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import DENSE, MOE, ModelConfig
+
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Paged caching targets stacked full-attention KV caches: dense/MoE
+    decoders with ``scan_layers`` and no sliding window (a SWA ring
+    buffer re-keys slots by ``pos % window``, which a page table does not
+    model; SSM/hybrid state is O(1) per slot and gains nothing)."""
+    return (cfg.family in (DENSE, MOE) and cfg.scan_layers
+            and not cfg.window)
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    return -(-int(n_tokens) // int(page_size))
+
+
+class PagePool:
+    """Fixed-size KV page pool: free-list + refcounts + prefix index.
+
+    The device arrays live in ``arrays`` (``{"k", "v"}``, page axis 1)
+    and are created lazily so constructing an engine never touches the
+    device; the jitted steps donate them back and forth. This object
+    owns only the host-side bookkeeping.
+    """
+
+    def __init__(self, cfg: ModelConfig, total_pages: int,
+                 page_size: int) -> None:
+        if not paged_supported(cfg):
+            raise ValueError(
+                f"paged KV cache unsupported for family={cfg.family!r} "
+                f"(scan_layers={cfg.scan_layers}, window={cfg.window})")
+        self.cfg = cfg
+        self.total_pages = int(total_pages)
+        self.page_size = int(page_size)
+        self.null_page = self.total_pages      # scratch page, never owned
+        self._free: List[int] = list(range(self.total_pages))
+        self._ref = np.zeros(self.total_pages, np.int32)
+        # prefix index: hash of the prompt's first (i+1)*page_size tokens
+        # -> resident page holding page i of that prefix
+        self._prefix: Dict[bytes, int] = {}
+        self._page_key: Dict[int, bytes] = {}
+        self.arrays: Optional[Dict[str, Any]] = None
+        self.stats = {"allocated": 0, "released": 0, "prefix_hits": 0,
+                      "prefix_tokens_reused": 0, "peak_in_use": 0}
+
+    # ------------------------------------------------------------- arrays
+    def ensure_arrays(self) -> None:
+        if self.arrays is not None:
+            return
+        cfg = self.cfg
+        shape = (cfg.n_layers, self.total_pages + 1, self.page_size,
+                 cfg.padded_kv_heads, cfg.resolved_head_dim)
+        self.arrays = {"k": jnp.zeros(shape, cfg.dtype),
+                       "v": jnp.zeros(shape, cfg.dtype)}
+
+    # ---------------------------------------------------------- free list
+    @property
+    def pages_in_use(self) -> int:
+        return self.total_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages (refcount 1 each), or None if the pool can't
+        cover them — the caller defers the request, never partial-allocs."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
+        self.stats["allocated"] += n
+        self.stats["peak_in_use"] = max(self.stats["peak_in_use"],
+                                        self.pages_in_use)
+        return pages
+
+    def retain(self, page: int) -> None:
+        assert self._ref[page] > 0, "retain of a free page"
+        self._ref[page] += 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        """Drop one reference per page; refcount-0 pages return to the
+        free list and fall out of the prefix index."""
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                key = self._page_key.pop(p, None)
+                if key is not None:
+                    self._prefix.pop(key, None)
+                self._free.append(p)
+                self.stats["released"] += 1
+
+    # -------------------------------------------------------- prefix reuse
+    def _prefix_keys(self, prompt: Any, n_pages: int) -> List[bytes]:
+        """Chained per-page digests: key ``i`` hashes the prompt's first
+        ``(i+1)*page_size`` tokens via one running sha256 — O(prompt),
+        not O(prompt^2), and content-equivalent to hashing each prefix."""
+        tokens = np.asarray(prompt, np.int32).reshape(-1)
+        keys: List[bytes] = []
+        h = hashlib.sha256()
+        for i in range(n_pages):
+            h.update(tokens[i * self.page_size:
+                            (i + 1) * self.page_size].tobytes())
+            keys.append(h.digest())
+        return keys
+
+    def match_prefix(self, prompt: Any) -> List[int]:
+        """Longest chain of resident pages covering a page-aligned prompt
+        prefix. Capped at ``len(prompt) - 1`` tokens so at least the last
+        prompt token is always re-run — its logits produce the first
+        generated token. Does NOT retain; the caller retains only once
+        the rest of the admission (owned-page alloc) succeeds."""
+        n = (len(np.asarray(prompt).reshape(-1)) - 1) // self.page_size
+        matched: List[int] = []
+        for key in self._prefix_keys(prompt, n):
+            page = self._prefix.get(key)
+            if page is None:
+                break
+            matched.append(page)
+        return matched
+
+    def register_prefix(self, prompt: Any, table: Sequence[int]) -> None:
+        """Index every full prompt page of ``table`` for future sharing
+        (first-registration wins; shared pages re-register as no-ops)."""
+        n = len(np.asarray(prompt).reshape(-1)) // self.page_size
+        for i, key in enumerate(self._prefix_keys(prompt, n)):
+            if key not in self._prefix:
+                self._prefix[key] = table[i]
+                self._page_key[table[i]] = key
+
+    def metrics(self) -> Dict[str, Any]:
+        out = dict(self.stats)
+        out["pages_in_use"] = self.pages_in_use
+        out["total_pages"] = self.total_pages
+        out["page_size"] = self.page_size
+        return out

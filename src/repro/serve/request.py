@@ -54,6 +54,10 @@ class Request(Completable):
             raise ValueError("max_new_tokens must be >= 1")
         self.req_state = RequestState.QUEUED
         self.tokens: List[int] = []
+        # paged serving: KV pages held (engine-owned; emptied at eviction)
+        # and how many prompt tokens were satisfied from the prefix cache
+        self.page_ids: List[int] = []
+        self.shared_prefix_tokens = 0
         # device-side per-step token refs; drained into .tokens at retirement
         self._device_tokens: List[Any] = []
         self._finished_evt = threading.Event()
@@ -66,13 +70,28 @@ class Request(Completable):
 
     # ------------------------------------------------------------- lifecycle
     def on_admitted(self) -> None:
-        self.req_state = RequestState.PREFILLING
+        # guard like on_first_token: a cancel() racing admission must not
+        # be resurrected into the decode pipeline
+        if self.req_state is RequestState.QUEUED:
+            self.req_state = RequestState.PREFILLING
         self.admit_time = time.monotonic()
+
+    def on_requeued(self) -> None:
+        """Undo admission (capacity-deferred: back to the queue head).
+        A concurrent cancel() must not be resurrected — only an
+        in-flight admission is downgraded (the batcher drops CANCELLED
+        requests at the next admit)."""
+        if self.req_state is RequestState.PREFILLING:
+            self.req_state = RequestState.QUEUED
+        self.admit_time = None
 
     def on_first_token(self) -> None:
         if self.first_token_time is None:
             self.first_token_time = time.monotonic()
-        self.req_state = RequestState.DECODING
+        # the continuation may fire after a concurrent cancel(); a terminal
+        # state must never be downgraded back to DECODING
+        if self.req_state is RequestState.PREFILLING:
+            self.req_state = RequestState.DECODING
 
     def push_device_token(self, token: Any) -> None:
         """Record one generated token (may still be an in-flight device
@@ -87,14 +106,18 @@ class Request(Completable):
     def remaining(self) -> int:
         return self.max_new_tokens - self.generated
 
-    def retire(self) -> None:
-        """Finish the request: materialize tokens, publish completion."""
+    def retire(self) -> bool:
+        """Finish the request: materialize tokens, publish completion.
+        Returns False (no-op) if a concurrent cancel() won the race."""
+        if self.req_state is RequestState.CANCELLED:
+            return False
         self.tokens = [int(t) for t in self._device_tokens]
         self._device_tokens = []
         self.req_state = RequestState.FINISHED
         self.finish_time = time.monotonic()
         self._finished_evt.set()
         self._complete(Status(payload=self.tokens, count=len(self.tokens)))
+        return True
 
     def cancel(self) -> bool:
         """Cancel a not-yet-finished request (best effort: queued requests

@@ -1,9 +1,18 @@
-"""Serving step factories: prefill / decode / long-context decode.
+"""Serving step factories: prefill / decode / paged variants.
 
 ``decode_32k`` and ``long_500k`` lower ``serve_step`` — one new token
 against a KV cache (or SSM state) of the shape's sequence length — NOT a
 training step (assignment note). Caches are donated by the drivers so the
 update is in-place on device.
+
+The ``make_paged_*`` factories are the jitted half of the paged KV cache
+(``serve.kv_cache``): inside the step, a slot's page table gathers its
+pages into a contiguous per-slot view, the ordinary ``lm_decode_step``
+runs against it, and only the one page containing the written position
+scatters back to the pool — shared prefix pages are read, never written.
+Shapes are static and bounded: tables are null-page padded to
+``max_pages`` (decode/scatter compile once) and suffix tails are padded
+to a page multiple by the engine (at most ``max_pages`` suffix shapes).
 """
 from __future__ import annotations
 
@@ -47,6 +56,93 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
     def decode(params, cache, token, pos):
         return lm.lm_decode_step(params, token, cfg, cache, pos)
     return decode
+
+
+# ------------------------------------------------------------- paged steps
+
+def _gather_pages(pool: Dict[str, jax.Array], table: jax.Array,
+                  page_size: int) -> Dict[str, jax.Array]:
+    """Page table -> contiguous per-slot cache view.
+
+    pool leaf: (L, total_pages+1, page_size, KV, hd); table: (max_pages,)
+    -> (L, 1, max_pages*page_size, KV, hd), i.e. a batch-1 stacked cache
+    exactly as ``lm_decode_step`` expects. Null-padded table tails gather
+    scratch-page garbage, which the decode mask (idx <= pos) zeroes out.
+    """
+    def one(p):
+        g = p[:, table]                       # (L, max_pages, ps, KV, hd)
+        L, n_pages = g.shape[0], g.shape[1]
+        return g.reshape((L, n_pages * page_size) + g.shape[3:])[:, None]
+    return jax.tree_util.tree_map(one, pool)
+
+
+def _written_page(new_cache: Dict[str, jax.Array], pos: jax.Array,
+                  page_size: int) -> Dict[str, jax.Array]:
+    """Slice the page containing ``pos`` out of the contiguous view."""
+    pi = (pos // page_size).astype(jnp.int32)
+    return jax.tree_util.tree_map(
+        lambda c: jax.lax.dynamic_slice_in_dim(
+            c[:, 0], pi * page_size, page_size, axis=1), new_cache)
+
+
+def make_paged_decode_step(cfg: ModelConfig, page_size: int) -> Callable:
+    """(params, pool, tokens(S,1,1), positions(S,), tables(S,max_pages))
+    → (logits(S,1,1,V), new pool). One token for every slot."""
+    decode_one = make_decode_step(cfg)
+
+    def step(params, pool, tokens, positions, tables):
+        def one(token, pos, table):
+            cache = _gather_pages(pool, table, page_size)
+            logits, new_cache = decode_one(params, cache, token, pos)
+            pi = (pos // page_size).astype(jnp.int32)
+            return logits, _written_page(new_cache, pos, page_size), table[pi]
+
+        logits, pages, targets = jax.vmap(one)(tokens, positions, tables)
+        # each live slot owns its write page, so targets collide only on
+        # the null page (idle slots) — scatter order there is irrelevant
+        new_pool = jax.tree_util.tree_map(
+            lambda p, pg: p.at[:, targets].set(jnp.swapaxes(pg, 0, 1)),
+            pool, pages)
+        return logits, new_pool
+    return step
+
+
+def make_paged_suffix_step(cfg: ModelConfig, page_size: int) -> Callable:
+    """Chunked suffix prefill for a prefix-cache hit: run the whole prompt
+    tail (positions ``pos .. pos+S-1``) against the shared pages in ONE
+    call — (params, pool, tokens(1,S), pos, gather_table, scatter_table)
+    → (logits(1,S,V), new pool). ``gather_table`` is the request's full
+    page table; ``scatter_table`` maps only request-OWNED entries (shared
+    prefix pages and padding point at the null page), so shared pages are
+    read but never written. Unwritten owned pages scatter their gathered
+    content back — an identity write."""
+    decode_one = make_decode_step(cfg)
+
+    def step(params, pool, tokens, pos, gather_table, scatter_table):
+        cache = _gather_pages(pool, gather_table, page_size)
+        logits, new_cache = decode_one(params, cache, tokens, pos)
+
+        def one(p, c):
+            L = c.shape[0]
+            pages = c[:, 0].reshape((L, -1, page_size) + c.shape[3:])
+            return p.at[:, scatter_table].set(pages)
+        return logits, jax.tree_util.tree_map(one, pool, new_cache)
+    return step
+
+
+def make_prefill_scatter(cfg: ModelConfig, page_size: int) -> Callable:
+    """Blit a dense prefill cache into the pool: (pool, dense_cache,
+    table(max_pages,)) → new pool. ``dense_cache`` leaves are
+    (L, 1, max_pages*page_size, KV, hd); entry ``i`` of the table is the
+    page receiving tokens [i*ps, (i+1)*ps) — null past the prompt."""
+    def scatter(pool, dense_cache, table):
+        def one(p, c):
+            L = c.shape[0]
+            pages = c[:, 0].reshape(
+                (L, -1, page_size) + c.shape[3:])   # (L, max_pages, ps, ..)
+            return p.at[:, table].set(pages)
+        return jax.tree_util.tree_map(one, pool, dense_cache)
+    return scatter
 
 
 def greedy_generate(cfg: ModelConfig, params, prompt: jax.Array,

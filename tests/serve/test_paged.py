@@ -1,0 +1,267 @@
+"""Paged KV cache: pool bookkeeping, paged-vs-dense token identity,
+prefix reuse, oversubscription, and engine cancellation paths (no page
+leaks on any exit path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import (PagePool, Request, RequestState, ServeEngine,
+                         greedy_generate, pages_for, serve_requests)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("paper_demo", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _greedy(cfg, params, prompt, n, cache_len=64):
+    return list(map(int, greedy_generate(cfg, params, prompt[None, :], n,
+                                         max_cache_len=cache_len)[0]))
+
+
+# ---------------------------------------------------------------- PagePool
+def test_pool_alloc_release_refcount(small_model):
+    cfg, _ = small_model
+    pool = PagePool(cfg, total_pages=4, page_size=8)
+    assert pool.pages_in_use == 0
+    a = pool.alloc(3)
+    assert len(a) == 3 and pool.pages_in_use == 3
+    assert pool.alloc(2) is None           # only 1 left: all-or-nothing
+    pool.retain(a[0])
+    pool.release(a)                        # a[0] survives (ref 2 -> 1)
+    assert pool.pages_in_use == 1
+    pool.release([a[0]])
+    assert pool.pages_in_use == 0
+    assert pool.stats["peak_in_use"] == 3
+
+
+def test_pool_prefix_match_caps_at_last_token(small_model):
+    cfg, _ = small_model
+    pool = PagePool(cfg, total_pages=8, page_size=4)
+    prompt = list(range(100, 112))               # 12 tokens = 3 full pages
+    table = pool.alloc(pages_for(12 + 4, 4))
+    pool.register_prefix(prompt, table)
+    # identical prompt: only 2 pages may match — the page holding the last
+    # prompt token must be re-run to produce the first generated token
+    assert pool.match_prefix(prompt) == table[:2]
+    # longer prompt sharing the 12-token prefix matches all 3 full pages
+    assert pool.match_prefix(prompt + [7]) == table[:3]
+    # diverging second page matches only the first
+    assert pool.match_prefix(prompt[:4] + [9] * 8) == table[:1]
+    pool.release(table)
+    assert pool.pages_in_use == 0
+    assert pool.match_prefix(prompt) == []       # freed pages fell out
+
+
+def test_pool_rejects_unsupported_family():
+    cfg = get_config("mamba2_370m", reduced=True)
+    with pytest.raises(ValueError, match="unsupported"):
+        PagePool(cfg, total_pages=4, page_size=8)
+
+
+# ------------------------------------------------- paged vs dense identity
+def test_paged_matches_dense_multipage(small_model):
+    """Cold-path paged decode is token-identical to the dense engine and
+    the synchronous greedy loop across page boundaries."""
+    cfg, params = small_model
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (3, 10), 0,
+                                 cfg.vocab_size)
+    lengths = [9, 14, 23]        # crosses several 8-token page boundaries
+    base = [_greedy(cfg, params, prompts[i], lengths[i]) for i in range(3)]
+
+    dense = serve_requests(cfg, params,
+                           [Request(prompts[i], lengths[i]) for i in range(3)],
+                           max_batch=2, max_cache_len=64, paged=False)
+    paged = serve_requests(cfg, params,
+                           [Request(prompts[i], lengths[i]) for i in range(3)],
+                           max_batch=2, max_cache_len=64, paged=True,
+                           page_size=8)
+    assert [r.tokens for r in dense] == base
+    assert [r.tokens for r in paged] == base
+
+
+def test_paged_prefix_reuse_hits_and_matches_dense(small_model):
+    """Requests sharing a page-aligned prompt prefix reuse resident pages
+    (prefix_hits > 0) and still produce the dense-path tokens."""
+    cfg, params = small_model
+    common = jax.random.randint(jax.random.PRNGKey(5), (12,), 0,
+                                cfg.vocab_size)
+    tails = jax.random.randint(jax.random.PRNGKey(6), (3, 4), 0,
+                               cfg.vocab_size)
+    prompts = [jnp.concatenate([common, tails[i]]) for i in range(3)]
+    base = [_greedy(cfg, params, p, 6) for p in prompts]
+
+    eng = ServeEngine(cfg, params, max_batch=3, max_cache_len=64,
+                      paged=True, page_size=8)
+    try:
+        reqs = [Request(p, 6) for p in prompts]
+        for r in reqs:
+            eng.submit(r)
+        eng.close_intake()
+        eng.run(timeout=300)
+        assert [r.tokens for r in reqs] == base
+        m = eng.metrics()
+        # 16-token prompts, 8-token pages: page 0 is a full shared page
+        assert m["prefix_hits"] == 2
+        assert m["prefix_tokens_reused"] == 16
+        assert reqs[0].shared_prefix_tokens == 0
+        assert {r.shared_prefix_tokens for r in reqs[1:]} == {8}
+        assert m["pages_in_use"] == 0          # everything released
+    finally:
+        eng.shutdown()
+
+
+def test_paged_prefix_hit_with_unaligned_tail_matches_dense(small_model):
+    """A prompt whose tail past the shared pages is not a page multiple
+    exercises the padded suffix-prefill path and stays token-exact."""
+    cfg, params = small_model
+    common = jax.random.randint(jax.random.PRNGKey(8), (12,), 0,
+                                cfg.vocab_size)
+    tails = jax.random.randint(jax.random.PRNGKey(9), (2, 2), 0,
+                               cfg.vocab_size)
+    prompts = [jnp.concatenate([common, tails[i]]) for i in range(2)]  # 14
+    base = [_greedy(cfg, params, p, 5) for p in prompts]
+    eng = ServeEngine(cfg, params, max_batch=2, max_cache_len=64,
+                      paged=True, page_size=8)
+    try:
+        reqs = [Request(p, 5) for p in prompts]
+        for r in reqs:
+            eng.submit(r)
+        eng.close_intake()
+        eng.run(timeout=300)
+        assert [r.tokens for r in reqs] == base
+        m = eng.metrics()
+        assert m["prefix_hits"] == 1 and m["suffix_tokens"] == 6  # 14 - 8
+    finally:
+        eng.shutdown()
+
+
+def test_requeue_does_not_resurrect_cancelled():
+    """cancel() racing a capacity-deferred requeue must stay terminal."""
+    req = Request([1, 2, 3], 4)
+    req.on_admitted()
+    assert req.cancel() is True
+    req.on_requeued()                        # engine returning it to queue
+    assert req.req_state is RequestState.CANCELLED
+
+
+def test_paged_oversubscription_defers_and_completes(small_model):
+    """A pool smaller than the worst case of the queue forces deferrals;
+    every request still completes and no page leaks."""
+    cfg, params = small_model
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (6, 6), 0,
+                                 cfg.vocab_size)
+    # 6 requests x 2 pages each = 12 pages worst case, pool holds 5
+    eng = ServeEngine(cfg, params, max_batch=4, max_cache_len=64,
+                      paged=True, page_size=8, max_seq_len=16,
+                      total_pages=5)
+    try:
+        reqs = [Request(prompts[i], 8) for i in range(6)]
+        for r in reqs:
+            eng.submit(r)
+        eng.close_intake()
+        eng.run(timeout=300)
+        assert all(len(r.tokens) == 8 for r in reqs)
+        m = eng.metrics()
+        assert m["deferred"] > 0
+        assert m["pages_in_use"] == 0
+        assert m["peak_in_use"] <= 5
+    finally:
+        eng.shutdown()
+
+
+def test_paged_submit_validates_footprint(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, max_cache_len=16,
+                      paged=True, page_size=8)
+    try:
+        with pytest.raises(ValueError, match="max_seq_len"):
+            eng.submit(Request(list(range(10)), 10))   # 20 > 16
+    finally:
+        eng.shutdown()
+
+
+# ------------------------------------------------------ cancellation paths
+def test_cancel_while_queued_drops_without_pages(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, max_cache_len=32,
+                      paged=True, page_size=8)
+    try:
+        keep = Request(jnp.arange(4), 3)
+        gone = Request(jnp.arange(4) + 1, 3)
+        eng.submit(keep)
+        eng.submit(gone)
+        gone.cancel()
+        eng.close_intake()
+        eng.run(timeout=300)
+        assert keep.req_state is RequestState.FINISHED
+        assert gone.req_state is RequestState.CANCELLED
+        assert eng.batcher.stats["dropped_cancelled"] == 1
+        assert eng.metrics()["pages_in_use"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_cancel_while_decoding_frees_slot_and_pages(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, max_cache_len=32,
+                      paged=True, page_size=8)
+    try:
+        victim = Request(jnp.arange(4), 20)
+        other = Request(jnp.arange(4) + 2, 6)
+        eng.submit(victim)
+        eng.submit(other)
+        eng.close_intake()
+        eng.run(until=lambda: victim.generated >= 2, timeout=300)
+        assert victim.req_state is RequestState.DECODING
+        assert victim.page_ids                   # holding pages mid-decode
+        victim.cancel()
+        eng.run(timeout=300)                     # drains the rest
+        assert other.req_state is RequestState.FINISHED
+        assert len(other.tokens) == 6
+        assert eng.stats["cancelled"] >= 1
+        assert victim.page_ids == []
+        assert eng.metrics()["pages_in_use"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_cancel_while_draining_still_releases_pages(small_model):
+    """Cancel in the window between the final dispatched step and its
+    completion continuation (white-box): the retirement continuation must
+    still return the pages even though the request never retires."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=1, max_cache_len=32,
+                      paged=True, page_size=8)
+    try:
+        req = Request(jnp.arange(4), 2)
+        eng.submit(req)
+        eng.close_intake()
+        eng._admit()
+        assert eng._dispatch_step()              # generates the 2nd (last)
+        assert eng._draining                     # budget met, step in flight
+        assert req.cancel() is True
+        eng.run(timeout=300)                     # fires _on_step_done
+        assert req.req_state is RequestState.CANCELLED
+        assert eng.stats["retired"] == 0
+        assert req.page_ids == []
+        assert eng.metrics()["pages_in_use"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_submit_after_close_is_refused_and_counted(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=1, max_cache_len=32)
+    try:
+        eng.close_intake()
+        with pytest.raises(RuntimeError, match="closed"):
+            eng.submit(Request(jnp.arange(4), 2))
+        assert eng.batcher.stats["refused_closed"] == 1
+    finally:
+        eng.shutdown()
