@@ -1,0 +1,183 @@
+"""Benchmark-regression gate for the ``serve.*`` blocks.
+
+Reads the machine-readable ``BENCH_serve.json`` that ``benchmarks/run.py
+--quick`` (or the full sweep) just wrote, extracts the serving headline
+metrics, and compares them against the committed
+``benchmarks/baselines.json``. Any metric falling below
+``baseline * (1 - tolerance)`` fails the job.
+
+Gated metrics are **dimensionless ratios** (speedups, effective-batch
+ratio, accept rate): absolute tokens/s and TTFT vary wildly across
+runner hardware, but the *relative* wins — continuous over static
+batching, paged over dense, speculative over plain paged — are the
+claims this repo makes, are hardware-portable, and are exactly what a
+bad change would erode. Absolute numbers are still recorded in the
+baselines file (``recorded`` key) for eyeballing, but never gated.
+
+Per-metric tolerances live in baselines.json so noisy metrics (CI
+runners are shared and throttled) can carry wider bands than stable
+ones. Refresh the file after an intentional perf change with::
+
+    PYTHONPATH=src python benchmarks/run.py --quick
+    python benchmarks/check_regression.py --update
+
+and commit the result.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, Optional
+
+DEFAULT_TOLERANCE = 0.25
+
+# metric name -> (how to pull it out of BENCH_serve.json, tolerance).
+# Tolerances: 0.25 absorbs CI-runner noise on stable ratios; the two
+# wall-clock-sensitive serving speedups get 0.45 (CPU decode compute
+# scales ~linearly with batch, so their tokens/s ratio is load-noisy —
+# a real regression collapses them toward/below 1.0, far past the band).
+GATED = {
+    "continuous_vs_static_tokens_per_s": (
+        lambda d: d["speedup_tokens_per_s"], 0.45),
+    "continuous_vs_static_ttft_p99": (
+        lambda d: d["static_greedy"]["ttft_p99_s"]
+        / d["continuous"]["ttft_p99_s"], 0.45),
+    "paged_vs_dense_effective_batch": (
+        lambda d: d["paged"]["effective_batch_ratio"], 0.25),
+    "spec_vs_paged_tokens_per_s": (
+        lambda d: d["spec"]["speedup_tokens_per_s"], 0.25),
+    "spec_accept_rate": (
+        lambda d: d["spec"]["speculative"]["accept_rate"], 0.25),
+}
+
+# absolute numbers snapshotted alongside (informational only)
+RECORDED = {
+    "continuous_tokens_per_s": lambda d: d["continuous"]["tokens_per_s"],
+    "paged_tokens_per_s": lambda d: d["paged"]["paged"]["tokens_per_s"],
+    "spec_tokens_per_s": lambda d: d["spec"]["speculative"]["tokens_per_s"],
+    "paged_vs_dense_tokens_per_s":
+        lambda d: d["paged"]["speedup_tokens_per_s"],
+}
+
+
+def extract(doc: dict) -> Dict[str, float]:
+    out = {}
+    for name, (fn, _tol) in GATED.items():
+        try:
+            out[name] = float(fn(doc))
+        except (KeyError, TypeError, ZeroDivisionError):
+            # block missing (partial run.py crash, --only subset) — leave
+            # the metric out so check() reports it as not extractable
+            # instead of dying on a raw traceback
+            pass
+    return out
+
+
+def update_baselines(doc: dict, path: Path) -> None:
+    old = {}
+    if path.exists():
+        old = json.loads(path.read_text())
+    metrics = {}
+    for name, (fn, default_tol) in GATED.items():
+        tol = old.get("metrics", {}).get(name, {}).get(
+            "tolerance", default_tol)
+        try:
+            value = round(float(fn(doc)), 4)
+        except (KeyError, TypeError, ZeroDivisionError):
+            raise SystemExit(
+                f"--update refuses a partial benchmark file: metric "
+                f"{name!r} is not extractable (run the full --quick "
+                f"sweep first)")
+        metrics[name] = {"value": value, "tolerance": tol}
+    recorded = {name: round(float(fn(doc)), 2)
+                for name, fn in RECORDED.items()}
+    path.write_text(json.dumps({
+        "comment": "serve.* regression baselines — gated metrics are "
+                   "dimensionless ratios (hardware-portable); refresh "
+                   "with check_regression.py --update after intentional "
+                   "perf changes",
+        "metrics": metrics,
+        "recorded": recorded,
+    }, indent=2) + "\n")
+    print(f"wrote {path}")
+
+
+def check(doc: dict, baselines: dict,
+          summary_path: Optional[str] = None) -> int:
+    current = extract(doc)
+    rows = []
+    failed = []
+    # a metric gated in code but absent from the committed baselines
+    # would otherwise silently not be compared at all
+    for name in GATED:
+        if name not in baselines["metrics"]:
+            failed.append(f"{name}: gated in check_regression.py but "
+                          "missing from baselines.json — run --update "
+                          "and commit the refreshed file")
+    for name, entry in baselines["metrics"].items():
+        if name not in current:
+            failed.append(f"{name}: in baselines but not extractable "
+                          "from BENCH_serve.json")
+            continue
+        base, tol = entry["value"], entry.get("tolerance",
+                                              DEFAULT_TOLERANCE)
+        floor = base * (1.0 - tol)
+        got = current[name]
+        ok = got >= floor
+        rows.append((name, base, floor, got, ok))
+        if not ok:
+            failed.append(f"{name}: {got:.3f} < floor {floor:.3f} "
+                          f"(baseline {base:.3f}, tolerance {tol:.0%})")
+
+    header = f"{'metric':<38} {'baseline':>9} {'floor':>8} " \
+             f"{'current':>8}  status"
+    lines = [header, "-" * len(header)]
+    for name, base, floor, got, ok in rows:
+        lines.append(f"{name:<38} {base:>9.3f} {floor:>8.3f} "
+                     f"{got:>8.3f}  {'ok' if ok else 'REGRESSED'}")
+    print("\n".join(lines))
+
+    if summary_path:
+        md = ["### serve benchmark regression gate", "",
+              "| metric | baseline | floor | current | status |",
+              "| --- | ---: | ---: | ---: | --- |"]
+        for name, base, floor, got, ok in rows:
+            md.append(f"| {name} | {base:.3f} | {floor:.3f} | {got:.3f} "
+                      f"| {'✅' if ok else '❌ regressed'} |")
+        with open(summary_path, "a") as f:
+            f.write("\n".join(md) + "\n")
+
+    if failed:
+        print("\nREGRESSION GATE FAILED:")
+        for f_ in failed:
+            print(f"  - {f_}")
+        return 1
+    print("\nregression gate passed")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default="BENCH_serve.json",
+                    help="benchmark results to check")
+    ap.add_argument("--baselines", default="benchmarks/baselines.json")
+    ap.add_argument("--update", action="store_true",
+                    help="refresh baselines.json from --bench (keeps "
+                    "hand-tuned tolerances) instead of checking")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="append a markdown result table to PATH (CI "
+                    "passes $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args()
+
+    doc = json.loads(Path(args.bench).read_text())
+    if args.update:
+        update_baselines(doc, Path(args.baselines))
+        return 0
+    baselines = json.loads(Path(args.baselines).read_text())
+    return check(doc, baselines, args.summary)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,6 +9,9 @@ Layers:
   ``Completable`` so callers attach continuations to completions.
 * ``serve.batcher`` — thread-safe admission on a ``poll_only +
   enqueue_complete`` CR; bursts queue without preempting the decode loop.
+* ``serve.drafter`` — pluggable ``Drafter`` protocol for self-speculative
+  decoding (default: n-gram prompt lookup); drafts are verified by one
+  multi-token paged decode step, so emitted tokens always match greedy.
 * ``serve.kv_cache`` — paged KV block pool: free-list page allocation,
   per-request page tables, and content-hashed prefix reuse (shared pages
   are mapped read-only; the mutable tail page is always private).
@@ -18,17 +21,20 @@ Layers:
   decode. Paged by default where the model family supports it.
 """
 from repro.serve.batcher import Batcher
+from repro.serve.drafter import Drafter, NgramDrafter, RepeatDrafter
 from repro.serve.engine import ServeEngine, serve_requests
 from repro.serve.kv_cache import PagePool, paged_supported, pages_for
 from repro.serve.request import Request, RequestState, summarize
 from repro.serve.steps import (greedy_generate, make_decode_step,
                                make_paged_decode_step,
-                               make_paged_suffix_step, make_prefill_scatter,
+                               make_paged_suffix_step,
+                               make_paged_verify_step, make_prefill_scatter,
                                make_prefill_step)
 
 __all__ = [
     "Batcher", "ServeEngine", "serve_requests", "Request", "RequestState",
     "summarize", "greedy_generate", "make_decode_step", "make_prefill_step",
     "PagePool", "paged_supported", "pages_for", "make_paged_decode_step",
-    "make_paged_suffix_step", "make_prefill_scatter",
+    "make_paged_suffix_step", "make_paged_verify_step",
+    "make_prefill_scatter", "Drafter", "NgramDrafter", "RepeatDrafter",
 ]

@@ -56,7 +56,7 @@ class Batcher:
         self._intake_lock = threading.Lock()
         self._closed = False
         self.stats = {"submitted": 0, "admitted": 0, "dropped_cancelled": 0,
-                      "refused_closed": 0}
+                      "refused_closed": 0, "submitted_speculative": 0}
 
     # ---------------------------------------------------------- client side
     def submit(self, request: Request) -> Request:
@@ -66,6 +66,10 @@ class Batcher:
                 self.stats["refused_closed"] += 1
                 raise RuntimeError("batcher intake is closed")
             self.stats["submitted"] += 1
+            # per-request speculate=K knob (None rides the engine default,
+            # which this intake-side counter cannot see)
+            if request.speculate:
+                self.stats["submitted_speculative"] += 1
             op = _SubmitOp()
             op._complete(Status(payload=request))
             # poll_only routes the ready continuation to the CR's private

@@ -21,6 +21,18 @@ cache and position:
 * **retirement** — a finished ``Request`` is itself a ``Completable``:
   its continuation fires for whoever attached one, and ``request.wait()``
   unblocks the submitting client.
+* **speculation** (``speculate=K``, paged mode) — each iteration becomes
+  a draft/verify pair: a host-side ``Drafter`` (n-gram prompt lookup by
+  default, pluggable) guesses K tokens per slot, and ONE multi-token
+  verify step scores all K+1 positions through the paged
+  ``decode_attention``, accepting the longest matching prefix. The
+  accept bookkeeping — per-slot position advance, token pushes,
+  retirement of slots that finish mid-accepted-run — is itself a
+  continuation on the verify step's output array, so the loop still
+  never blocks on device work; slots simply become re-steppable when
+  their verify completes. Token streams are identical to non-speculative
+  greedy decode (the verify step emits only what the model itself
+  argmaxes); speculation changes the schedule, never the tokens.
 
 **Memory** comes in two flavours:
 
@@ -54,11 +66,12 @@ from repro.core import ArrayOp, Engine, Scheduler
 from repro.models import lm
 from repro.models.common import AUDIO, ModelConfig
 from repro.serve.batcher import Batcher
+from repro.serve.drafter import Drafter, NgramDrafter
 from repro.serve.kv_cache import PagePool, paged_supported, pages_for
 from repro.serve.request import Request, RequestState, summarize
 from repro.serve.steps import (make_decode_step, make_paged_decode_step,
-                               make_paged_suffix_step, make_prefill_scatter,
-                               make_prefill_step)
+                               make_paged_suffix_step, make_paged_verify_step,
+                               make_prefill_scatter, make_prefill_step)
 
 
 class ServeEngine:
@@ -74,6 +87,13 @@ class ServeEngine:
     (prompt + generation bound per request, default ``max_cache_len``),
     ``total_pages`` in the pool (default ``max_batch * ceil(max_seq_len /
     page_size)`` — shrink it, or raise ``max_batch``, to oversubscribe).
+
+    Speculative knobs (paged only): ``speculate=K`` compiles a verify
+    step scoring K drafts + 1 real token per slot per iteration;
+    ``drafter`` plugs any ``serve.drafter.Drafter`` (default: n-gram
+    prompt lookup). Requests opt out (``speculate=0``) or cap their own
+    K per step; accepted runs advance a slot several tokens per step
+    while staying token-identical to non-speculative greedy decode.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, *,
@@ -85,7 +105,9 @@ class ServeEngine:
                  paged: Optional[bool] = None,
                  page_size: int = 16,
                  total_pages: Optional[int] = None,
-                 max_seq_len: Optional[int] = None) -> None:
+                 max_seq_len: Optional[int] = None,
+                 speculate: int = 0,
+                 drafter: Optional[Drafter] = None) -> None:
         if cfg.family == AUDIO:
             raise NotImplementedError(
                 "ServeEngine drives token-in/token-out LM decode; audio "
@@ -96,12 +118,18 @@ class ServeEngine:
             raise ValueError(
                 f"paged KV cache unsupported for {cfg.name!r} "
                 "(needs dense/MoE family, scan_layers, no sliding window)")
+        if speculate and not paged:
+            raise ValueError(
+                "speculative decoding runs through the paged verify step; "
+                "speculate > 0 requires paged=True")
         self.cfg = cfg
         self.params = params
         self.max_batch = int(max_batch)
         self.max_cache_len = int(max_cache_len)
         self.max_inflight = max(1, int(max_inflight))
         self.paged = bool(paged)
+        self.speculate = max(0, int(speculate))
+        self.drafter = drafter if drafter is not None else NgramDrafter()
         self._own_engine = engine is None
         self.engine = engine if engine is not None else \
             Engine(scheduler=scheduler)
@@ -117,13 +145,21 @@ class ServeEngine:
             self.page_size = int(page_size)
             self.max_seq_len = int(max_seq_len or max_cache_len)
             self.max_pages = pages_for(self.max_seq_len, self.page_size)
-            # padded gather width: every per-slot view is max_pages pages
-            self._padded_len = self.max_pages * self.page_size
+            # padded gather width: every per-slot view is _table_pages
+            # pages — max_pages a request may hold, plus scratch slack so
+            # a verify step starting on the last real page can write its
+            # whole K+1 window without dynamic-slice clamping (the slack
+            # is table-padded to the null page, so the overflow lands in
+            # the scratch page, never a real one)
+            self._spec_pad = pages_for(self.speculate, self.page_size) \
+                if self.speculate else 0
+            self._table_pages = self.max_pages + self._spec_pad
+            self._padded_len = self._table_pages * self.page_size
             n_pool = int(total_pages) if total_pages is not None \
                 else S * self.max_pages
             self.pool = PagePool(cfg, n_pool, self.page_size)
-            self._tables = np.full((S, self.max_pages), self.pool.null_page,
-                                   np.int32)
+            self._tables = np.full((S, self._table_pages),
+                                   self.pool.null_page, np.int32)
             self._prefill_fn = jax.jit(
                 make_prefill_step(cfg, self._padded_len))
             self._decode_fn = jax.jit(
@@ -135,6 +171,13 @@ class ServeEngine:
             self._scatter_fn = jax.jit(
                 make_prefill_scatter(cfg, self.page_size),
                 donate_argnums=(0,))
+            if self.speculate:
+                self._verify_fn = jax.jit(
+                    make_paged_verify_step(cfg, self.page_size,
+                                           self.speculate),
+                    donate_argnums=(1,))
+                self._verify_pages = 1 + pages_for(self.speculate,
+                                                   self.page_size)
         else:
             self._prefill_fn = jax.jit(
                 make_prefill_step(cfg, self.max_cache_len))
@@ -150,9 +193,14 @@ class ServeEngine:
         # -- slot state (loop thread only) --
         self._slots: List[Optional[Request]] = [None] * S
         self._draining: Set[int] = set()      # token budget met, step in flight
+        self._verifying: Set[int] = set()     # verify step in flight
         self._pos = np.zeros(S, np.int32)     # next write position per slot
         self._cache: Any = None               # dense mode: stacked caches
         self._tokens: Any = None              # next input tokens (S, 1, 1)
+        # speculative: per-slot host context (prompt + emitted tokens),
+        # appended by the prefill/verify continuations as device steps
+        # actually complete — what the drafter matches against
+        self._ctx: List[Optional[List[int]]] = [None] * S
         self._inflight = 0                    # dispatched, not-yet-complete steps
         self._stalled_at: Optional[int] = None  # pages_in_use at last deferral
         self._retired: List[Request] = []
@@ -160,7 +208,8 @@ class ServeEngine:
         self.stats = {"steps": 0, "prefills": 0, "retired": 0,
                       "slot_steps": 0, "padded_steps": 0, "cancelled": 0,
                       "suffix_steps": 0, "suffix_tokens": 0, "deferred": 0,
-                      "max_active": 0}
+                      "max_active": 0, "verify_steps": 0, "spec_tokens": 0,
+                      "draft_proposed": 0, "draft_accepted": 0}
 
     # ------------------------------------------------------------- clients
     def submit(self, request: Request) -> Request:
@@ -243,7 +292,8 @@ class ServeEngine:
             req.push_device_token(first[0])
             self.stats["prefills"] += 1
             self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
-                                      (req, True), cr=self.cr_steps)
+                                      (req, True, None, None),
+                                      cr=self.cr_steps)
             return True
 
         self._ensure_state()
@@ -268,8 +318,14 @@ class ServeEngine:
         self._tokens = self._tokens.at[slot].set(first[:, None])
         self._pos[slot] = plen
         self._slots[slot] = req
+        if self.speculate:
+            # host context for the drafter: the prompt now; the first
+            # token when its array completes (prefill continuation), and
+            # every accepted run as verify continuations fire
+            self._ctx[slot] = [int(t) for t in
+                               np.asarray(req.prompt, np.int32).reshape(-1)]
         self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
-                                  (req, False), cr=self.cr_steps)
+                                  (req, False, slot, first), cr=self.cr_steps)
         return True
 
     def _prefill_paged(self, req: Request,
@@ -301,7 +357,7 @@ class ServeEngine:
             pool.stats["prefix_tokens_reused"] += len(shared) * ps
             start = len(shared) * ps
             tail = plen - start
-            scat = np.full(self.max_pages, pool.null_page, np.int32)
+            scat = np.full(self._table_pages, pool.null_page, np.int32)
             scat[len(shared):len(table)] = table[len(shared):]
             # pad the tail to a page multiple so at most max_pages suffix
             # shapes ever compile; pad rows are causally invisible to the
@@ -323,7 +379,8 @@ class ServeEngine:
             # prompt pages into the pool in one scatter
             logits, cache1 = self._prefill_fn(self.params, {"tokens": prompt})
             first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            scatter_table = np.full(self.max_pages, pool.null_page, np.int32)
+            scatter_table = np.full(self._table_pages, pool.null_page,
+                                    np.int32)
             n_prompt_pages = pages_for(plen, ps)
             scatter_table[:n_prompt_pages] = table[:n_prompt_pages]
             pool.arrays = self._scatter_fn(pool.arrays, cache1,
@@ -332,26 +389,40 @@ class ServeEngine:
         return first
 
     def _padded_table(self, table: Sequence[int]) -> jax.Array:
-        out = np.full(self.max_pages, self.pool.null_page, np.int32)
+        out = np.full(self._table_pages, self.pool.null_page, np.int32)
         out[:len(table)] = table
         return jnp.asarray(out)
 
-    def _on_prefill_done(self, statuses, meta: Tuple[Request, bool]) -> None:
-        req, retire_now = meta
+    def _on_prefill_done(self, statuses, meta) -> None:
+        req, retire_now, slot, first = meta
         req.on_first_token()
         if retire_now:
             self._retire(req)
+            return
+        # speculative context append — by continuation time the array is
+        # complete, so int() never blocks. Guard against the slot having
+        # been evicted (cancel) and possibly reseated before this fires.
+        if (slot is not None and self._ctx[slot] is not None
+                and self._slots[slot] is req):
+            self._ctx[slot].append(int(first[0]))
 
     # --------------------------------------------------------------- decode
-    def _dispatch_step(self) -> bool:
-        live = [(i, r) for i, r in enumerate(self._slots)
-                if r is not None and i not in self._draining]
-        # drop cancellations before paying for a step
+    def _sweep_cancelled(self,
+                         live: List[Tuple[int, Request]]) -> None:
+        """Drop cancellations before paying for a step (shared by the
+        plain-decode and speculative-verify dispatch paths)."""
         for i, r in list(live):
             if r.req_state is RequestState.CANCELLED:
                 self._evict_slot(i, r)
                 self.stats["cancelled"] += 1
                 live.remove((i, r))
+
+    def _dispatch_step(self) -> bool:
+        if self.speculate:
+            return self._dispatch_verify()
+        live = [(i, r) for i, r in enumerate(self._slots)
+                if r is not None and i not in self._draining]
+        self._sweep_cancelled(live)
         if not live:
             return False
         if self.paged:
@@ -389,12 +460,121 @@ class ServeEngine:
             self._evict_slot(slot, req)
             self._retire(req)
 
+    # ---------------------------------------------------------- speculative
+    def _slot_drafts(self, slot: int, req: Request) -> List[int]:
+        """Draft tokens for one slot: the per-request knob caps the
+        engine's compiled K, the token budget caps the window (never
+        propose past ``remaining - 1`` — the verify step always emits at
+        least one real token), and the drafter may return fewer still."""
+        k = self.speculate if req.speculate is None \
+            else min(req.speculate, self.speculate)
+        k = min(k, req.remaining - 1)
+        if k <= 0 or self._ctx[slot] is None:
+            return []
+        return list(self.drafter.draft(self._ctx[slot], k))[:k]
+
+    def _dispatch_verify(self) -> bool:
+        """One speculative verify step for every steppable slot.
+
+        Slots whose previous verify continuation has not fired yet are
+        excluded (their position/token state is only updated when the
+        device step completes); freshly admitted slots join immediately.
+        Slots with no usable drafts run with k=0 — the verify step then
+        degenerates to plain greedy decode for them (one emitted token),
+        so mixed speculative / non-speculative batches share one step.
+        """
+        live = [(i, r) for i, r in enumerate(self._slots)
+                if r is not None and i not in self._verifying]
+        self._sweep_cancelled(live)
+        if not live:
+            return False
+        S, K = self.max_batch, self.speculate
+        drafts = np.zeros((S, K), np.int32)
+        n_drafts = np.zeros(S, np.int32)
+        # write tables: rows for idle / still-verifying slots stay all
+        # null, so their (garbage) lanes scatter into the scratch page
+        wtables = np.full((S, self._verify_pages), self.pool.null_page,
+                          np.int32)
+        for i, r in live:
+            d = self._slot_drafts(i, r)
+            n_drafts[i] = len(d)
+            drafts[i, :len(d)] = d
+            wtables[i] = self.pool.write_table(r.page_ids,
+                                               int(self._pos[i]),
+                                               self._verify_pages)
+        tokens = jnp.concatenate(
+            [self._tokens, jnp.asarray(drafts)[:, None, :]], axis=2)
+        emitted, accepts, self.pool.arrays = self._verify_fn(
+            self.params, self.pool.arrays, tokens, jnp.asarray(self._pos),
+            jnp.asarray(self._tables), jnp.asarray(wtables),
+            jnp.asarray(n_drafts))
+        self._verifying.update(i for i, _ in live)
+        self._inflight += 1
+        self.stats["steps"] += 1
+        self.stats["verify_steps"] += 1
+        self.stats["slot_steps"] += len(live)
+        self.stats["padded_steps"] += self.max_batch - len(live)
+        self.stats["draft_proposed"] += int(n_drafts.sum())
+        self.stats["max_active"] = max(self.stats["max_active"], len(live))
+        self.engine.continue_when(ArrayOp(emitted), self._on_verify_done,
+                                  (live, emitted, accepts, n_drafts),
+                                  cr=self.cr_steps)
+        return True
+
+    def _on_verify_done(self, statuses, meta) -> None:
+        """Accept bookkeeping — runs when the verify step's arrays are
+        actually complete, so the host reads below never block. Mixed
+        accept lengths advance each slot independently; a slot whose
+        accepted run reaches its token budget retires right here,
+        mid-verify, through the same continuation."""
+        live, emitted, accepts, n_drafts = meta
+        self._inflight -= 1
+        emitted = np.asarray(emitted)
+        accepts = np.asarray(accepts)
+        upd_slots: List[int] = []
+        upd_tokens: List[int] = []
+        for i, req in live:
+            self._verifying.discard(i)
+            if req.req_state is RequestState.CANCELLED:
+                self._evict_slot(i, req)
+                self.stats["cancelled"] += 1
+                continue
+            a = int(accepts[i])
+            n_emit = min(a + 1, req.remaining)   # a <= remaining-1 by cap
+            toks = [int(t) for t in emitted[i, :n_emit]]
+            for t in toks:
+                req.push_device_token(t)
+            req.draft_tokens_proposed += int(n_drafts[i])
+            req.draft_tokens_accepted += a
+            self.stats["draft_accepted"] += a
+            self.stats["spec_tokens"] += n_emit
+            if self._ctx[i] is not None:
+                self._ctx[i].extend(toks)
+            self._pos[i] += n_emit
+            if req.remaining == 0:
+                self._evict_slot(i, req)
+                self._retire(req)
+            else:
+                upd_slots.append(i)
+                upd_tokens.append(toks[-1])
+        if upd_slots:
+            # fixed-shape masked update (a variable-length index scatter
+            # would recompile per distinct count of advancing slots)
+            mask = np.zeros(self.max_batch, bool)
+            vals = np.zeros(self.max_batch, np.int32)
+            mask[upd_slots] = True
+            vals[upd_slots] = upd_tokens
+            self._tokens = jnp.where(
+                jnp.asarray(mask)[:, None, None],
+                jnp.asarray(vals)[:, None, None], self._tokens)
+
     def _evict_slot(self, slot: int, req: Request) -> None:
         """Free a slot and return the request's pages to the pool (every
         exit path — retirement, cancellation mid-decode or mid-drain —
         funnels through here, so pages can never leak)."""
         self._slots[slot] = None
         self._pos[slot] = 0
+        self._ctx[slot] = None
         if self.paged:
             self._tables[slot, :] = self.pool.null_page
         self._release_pages(req)
@@ -460,6 +640,12 @@ class ServeEngine:
         out = summarize(self.retired)
         out.update(self.stats)
         out["paged"] = self.paged
+        out["speculate"] = self.speculate
+        if self.stats["draft_proposed"]:
+            # engine-wide accept rate (includes cancelled requests;
+            # summarize() reports the finished-request rate)
+            out["accept_rate_engine"] = (self.stats["draft_accepted"]
+                                         / self.stats["draft_proposed"])
         if self.paged:
             out.update(self.pool.metrics())
         return out

@@ -127,6 +127,33 @@ class PagePool:
                 self._free.append(p)
                 self.stats["released"] += 1
 
+    # ------------------------------------------------- speculative writes
+    def write_table(self, page_ids: Sequence[int], pos: int,
+                    width: int) -> np.ndarray:
+        """Scatter targets for a verify step whose write window starts at
+        ``pos`` and spans ``width`` pages (``1 + ceil(K / page_size)``
+        for a K-draft verify): entry ``j`` receives the page holding
+        positions ``(pos // page_size + j) * page_size ...``; entries
+        past the request's reserved footprint map to the scratch page.
+
+        This is the rollback half of speculative page writes: a request
+        reserves ``ceil((prompt + max_new) / page_size)`` pages at
+        admission, but a verify step may write up to ``n_draft``
+        positions past the token budget (padded draft slots of a batch
+        member that is nearly finished). Nulling those entries sends the
+        out-of-footprint KV to the scratch page, so rejected tails can
+        never land in — or leak — a real page; rejected writes *inside*
+        the footprint are rolled back positionally (the engine advances
+        ``pos`` only by the accepted run, and the next verify step
+        overwrites them before the causal mask can expose them).
+        """
+        out = np.full(width, self.null_page, np.int32)
+        first = int(pos) // self.page_size
+        for j in range(width):
+            if first + j < len(page_ids):
+                out[j] = page_ids[first + j]
+        return out
+
     # -------------------------------------------------------- prefix reuse
     def _prefix_keys(self, prompt: Any, n_pages: int) -> List[bytes]:
         """Chained per-page digests: key ``i`` hashes the prompt's first

@@ -45,13 +45,22 @@ class Request(Completable):
     """
 
     def __init__(self, prompt: Any, max_new_tokens: int,
-                 *, arrival_time: Optional[float] = None) -> None:
+                 *, speculate: Optional[int] = None,
+                 arrival_time: Optional[float] = None) -> None:
         super().__init__()
         self.req_id = next(_req_ids)
         self.prompt = prompt
         self.max_new_tokens = int(max_new_tokens)
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        # speculative decoding knob: None → engine default K; 0 disables
+        # speculation for this request; k caps the drafts per verify step
+        # (the engine further caps at its own compiled K and the budget)
+        if speculate is not None and int(speculate) < 0:
+            raise ValueError("speculate must be >= 0")
+        self.speculate = None if speculate is None else int(speculate)
+        self.draft_tokens_proposed = 0
+        self.draft_tokens_accepted = 0
         self.req_state = RequestState.QUEUED
         self.tokens: List[int] = []
         # paged serving: KV pages held (engine-owned; emptied at eviction)
@@ -153,6 +162,14 @@ class Request(Completable):
         return self.first_token_time - self.arrival_time
 
     @property
+    def accept_rate(self) -> Optional[float]:
+        """Fraction of proposed draft tokens the verify step accepted
+        (None when the request never ran speculatively)."""
+        if self.draft_tokens_proposed == 0:
+            return None
+        return self.draft_tokens_accepted / self.draft_tokens_proposed
+
+    @property
     def latency(self) -> Optional[float]:
         if self.finish_time is None:
             return None
@@ -168,12 +185,17 @@ def summarize(requests: Sequence[Request]) -> dict:
     done = [r for r in requests if r.req_state is RequestState.FINISHED]
     ttfts = sorted(r.ttft for r in done if r.ttft is not None)
     total_tokens = sum(len(r.tokens) for r in done)
+    proposed = sum(r.draft_tokens_proposed for r in done)
+    accepted = sum(r.draft_tokens_accepted for r in done)
     out = {
         "finished": len(done),
         "total_tokens": total_tokens,
         "ttft_mean": sum(ttfts) / len(ttfts) if ttfts else 0.0,
         "ttft_p50": _percentile(ttfts, 0.50),
         "ttft_p99": _percentile(ttfts, 0.99),
+        "draft_tokens_proposed": proposed,
+        "draft_tokens_accepted": accepted,
+        "accept_rate": accepted / proposed if proposed else 0.0,
     }
     return out
 

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.models import encdec, lm
 from repro.models.common import AUDIO, ModelConfig
+from repro.serve.kv_cache import pages_for
 
 
 def make_prefill_step(cfg: ModelConfig, max_cache_len: int) -> Callable:
@@ -104,6 +105,72 @@ def make_paged_decode_step(cfg: ModelConfig, page_size: int) -> Callable:
             lambda p, pg: p.at[:, targets].set(jnp.swapaxes(pg, 0, 1)),
             pool, pages)
         return logits, new_pool
+    return step
+
+
+def make_paged_verify_step(cfg: ModelConfig, page_size: int,
+                           n_draft: int) -> Callable:
+    """Speculative verify: score ``1 + n_draft`` tokens per slot in ONE
+    multi-token paged decode and compute each slot's accept length on
+    device.
+
+    ``(params, pool, tokens(S,1,1+K), positions(S,), tables(S,T),
+    write_tables(S,W), n_drafts(S,))`` → ``(emitted(S,1+K), accepts(S,),
+    new pool)`` where K = ``n_draft`` and W = ``1 + ceil(K/page_size)``
+    (the most pages a K+1-token write window can span).
+
+    Per slot: token 0 is the slot's real next-input token, tokens 1..K
+    are drafter guesses. The ordinary ``lm_decode_step`` runs all K+1
+    positions against the gathered page view (causal mask per query
+    row), ``emitted[j] = argmax(logits[j])`` is the token the model
+    *actually* produces at position ``pos+j+1``, and the accept length
+    is the longest prefix where the guesses reproduce it:
+    ``accepts = max a such that tokens[1..a] == emitted[0..a-1]``
+    (masked to the slot's live draft count ``n_drafts``). Everything in
+    ``emitted[:accepts+1]`` is exactly the greedy-decode token stream —
+    speculation changes the schedule, never the tokens.
+
+    Rollback is split between the write tables and the engine's position
+    bookkeeping: the KV writes for all K+1 positions land in the slices
+    ``write_tables`` maps — the engine maps only request-owned pages in
+    the write window and points everything else (rejected tails past the
+    token budget, idle slots) at the scratch page — and positions past
+    the accepted run are overwritten by the next verify step before the
+    advancing causal mask can expose them, so no stale entry is ever
+    attended and no page leaks.
+    """
+    decode_one = make_decode_step(cfg)
+    n_wpages = 1 + pages_for(n_draft, page_size)
+
+    def step(params, pool, tokens, positions, tables, write_tables,
+             n_drafts):
+        def one(token, pos, table, k):
+            cache = _gather_pages(pool, table, page_size)
+            logits, new_cache = decode_one(params, cache, token, pos)
+            emitted = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
+            ok = ((token[0, 1:] == emitted[:-1])
+                  & (jnp.arange(n_draft, dtype=jnp.int32) < k))
+            accept = jnp.sum(jnp.cumprod(ok.astype(jnp.int32)))
+            pi = (pos // page_size).astype(jnp.int32)
+            pages = jax.tree_util.tree_map(
+                lambda c: jax.lax.dynamic_slice_in_dim(
+                    c[:, 0], pi * page_size, n_wpages * page_size, axis=1
+                ).reshape((c.shape[0], n_wpages, page_size) + c.shape[3:]),
+                new_cache)
+            return emitted, accept.astype(jnp.int32), pages
+
+        emitted, accepts, pages = jax.vmap(one)(tokens, positions, tables,
+                                                n_drafts)
+
+        # write pages are request-owned and disjoint across slots, so the
+        # flattened scatter collides only on the scratch page (idle slots,
+        # out-of-footprint tails) where order is irrelevant
+        def scat(p, pg):                      # pg: (S, L, W, ps, KV, hd)
+            pg = jnp.moveaxis(pg, 0, 1)       # (L, S, W, ps, KV, hd)
+            pg = pg.reshape((pg.shape[0], -1) + pg.shape[3:])
+            return p.at[:, write_tables.reshape(-1)].set(pg)
+
+        return emitted, accepts, jax.tree_util.tree_map(scat, pool, pages)
     return step
 
 

@@ -1,0 +1,317 @@
+"""Speculative decoding: drafter units, write-table rollback mapping,
+token identity with non-speculative greedy decode (random and
+repetition-friendly workloads, mixed per-request accept lengths in one
+batch, capacity-deferral/eviction, cancellation mid-verify), and
+kv-page leak checks on every exit path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import (NgramDrafter, PagePool, RepeatDrafter, Request,
+                         RequestState, ServeEngine, greedy_generate,
+                         serve_requests)
+from repro.serve.steps import make_decode_step, make_prefill_step
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("paper_demo", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def greedy_ref(small_model):
+    """Greedy reference decoder with jits built once for the module
+    (``greedy_generate`` re-jits per call, which dominates test time)."""
+    cfg, params = small_model
+    prefill = jax.jit(make_prefill_step(cfg, 64))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+
+    def ref(prompt, n):
+        prompt = jnp.asarray(prompt, jnp.int32)[None, :]
+        logits, cache = prefill(params, {"tokens": prompt})
+        pos = prompt.shape[1]
+        out = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)]
+        for i in range(n - 1):
+            logits, cache = decode(params, cache, out[-1][:, None],
+                                   jnp.int32(pos + i))
+            out.append(jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32))
+        return [int(t[0]) for t in out]
+    return ref
+
+
+def _repetitive_prompts(n, plen=16):
+    motif = np.array([5, 11, 3, 7])
+    return [np.tile(np.roll(motif, i % 4), plen // 4) for i in range(n)]
+
+
+# ----------------------------------------------------------------- drafter
+def test_ngram_drafter_prefers_long_and_recent_matches():
+    d = NgramDrafter(max_ngram=3)
+    # trailing (8, 9) occurred twice; the most recent occurrence (idx 5)
+    # is followed by 1, 2 — not the older continuation 7
+    ctx = [8, 9, 7, 0, 4, 8, 9, 1, 2, 8, 9]
+    assert d.draft(ctx, 2) == [1, 2]
+    # a longer n-gram match beats a shorter one: trailing (4, 8, 9)
+    # matched at idx 4 → continuation differs from the bigram match
+    ctx3 = [4, 8, 9, 6, 4, 8, 9, 5, 1, 4, 8, 9]
+    assert d.draft(ctx3, 2) == [5, 1]
+    assert d.draft(ctx3, 5) == [5, 1, 4, 8, 9]   # truncated at k/available
+
+
+def test_ngram_drafter_no_match_and_edge_cases():
+    d = NgramDrafter(max_ngram=3)
+    assert d.draft([1, 2, 3, 4], 3) == []        # no repeats anywhere
+    assert d.draft([], 3) == []
+    assert d.draft([7], 3) == []
+    assert d.draft([1, 2, 1, 2], 0) == []
+    assert d.draft([3, 3, 3, 3], 2) == [3, 3]    # constant run
+    with pytest.raises(ValueError):
+        NgramDrafter(max_ngram=0)
+
+
+def test_repeat_drafter_protocol():
+    d = RepeatDrafter()
+    assert d.draft([4, 9], 3) == [9, 9, 9]
+    assert d.draft([], 3) == []
+
+
+# ------------------------------------------------------- write-table unit
+def test_pool_write_table_maps_owned_and_rolls_back(small_model):
+    cfg, _ = small_model
+    pool = PagePool(cfg, total_pages=8, page_size=4)
+    pages = pool.alloc(3)
+    # write window starting at pos 5 spans pages 1.. of the table
+    wt = pool.write_table(pages, pos=5, width=3)
+    assert list(wt) == [pages[1], pages[2], pool.null_page]
+    # near the end of the footprint: out-of-footprint entries are nulled
+    # (the rollback half: past-budget speculative writes hit scratch)
+    wt = pool.write_table(pages, pos=11, width=3)
+    assert list(wt) == [pages[2], pool.null_page, pool.null_page]
+    pool.release(pages)
+    assert pool.pages_in_use == 0
+
+
+# ------------------------------------------------------- engine validation
+def test_speculate_requires_paged(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, paged=False, speculate=4)
+    with pytest.raises(ValueError):
+        Request([1, 2], 4, speculate=-1)
+
+
+# -------------------------------------------------------- token identity
+@pytest.fixture(scope="module")
+def spec_engine(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=3, max_cache_len=64,
+                      paged=True, page_size=8, max_seq_len=64, speculate=3)
+    yield eng
+    eng.shutdown()
+
+
+def _serve(eng, reqs):
+    done = eng.stats["retired"] + eng.stats["cancelled"]
+    target = done + len(reqs)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(until=lambda: (eng.stats["retired"]
+                           + eng.stats["cancelled"]) >= target,
+            timeout=300)
+    return reqs
+
+
+def test_spec_matches_greedy_on_random_prompts(spec_engine, greedy_ref,
+                                               small_model):
+    """Random prompts barely accept — identity must hold regardless."""
+    cfg, _ = small_model
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (3, 12), 0,
+                                 cfg.vocab_size)
+    lengths = [9, 14, 23]                     # crosses page boundaries
+    base = [greedy_ref(prompts[i], lengths[i]) for i in range(3)]
+    reqs = _serve(spec_engine,
+                  [Request(prompts[i], lengths[i]) for i in range(3)])
+    assert [r.tokens for r in reqs] == base
+    assert spec_engine.metrics()["pages_in_use"] == 0
+
+
+def test_spec_repetitive_accepts_and_matches(spec_engine, greedy_ref):
+    """Repetition-friendly workload: drafts accept (>0) and the emitted
+    stream is still exactly the greedy one."""
+    prompts = _repetitive_prompts(3)
+    base = [greedy_ref(p, 30) for p in prompts]
+    reqs = _serve(spec_engine, [Request(p, 30) for p in prompts])
+    assert [r.tokens for r in reqs] == base
+    m = spec_engine.metrics()
+    assert m["draft_accepted"] > 0
+    assert m["verify_steps"] > 0
+    assert any(r.accept_rate and r.accept_rate > 0 for r in reqs)
+    assert m["pages_in_use"] == 0
+
+
+def test_spec_mixed_accept_lengths_in_one_batch(spec_engine, greedy_ref,
+                                                small_model):
+    """One batch mixing speculate=0 (never proposes), speculate=1
+    (capped), and engine-default requests, with different lengths —
+    slots advance by different amounts per verify step and every stream
+    stays token-exact."""
+    cfg, _ = small_model
+    rep = _repetitive_prompts(2)
+    rand = np.asarray(jax.random.randint(jax.random.PRNGKey(9), (12,), 0,
+                                         cfg.vocab_size))
+    specs = [0, 1, None]
+    prompts = [rep[0], rep[1], rand]
+    lengths = [18, 25, 11]
+    base = [greedy_ref(p, n) for p, n in zip(prompts, lengths)]
+    reqs = _serve(spec_engine,
+                  [Request(p, n, speculate=s)
+                   for p, n, s in zip(prompts, lengths, specs)])
+    assert [r.tokens for r in reqs] == base
+    assert reqs[0].draft_tokens_proposed == 0    # opted out
+    assert spec_engine.batcher.stats["submitted_speculative"] >= 1
+    assert spec_engine.metrics()["pages_in_use"] == 0
+
+
+def test_spec_slot_reuse_more_requests_than_slots(spec_engine, greedy_ref):
+    """6 requests through 3 slots: retirement mid-verify frees slots for
+    queued requests; identity holds across the reuse boundary."""
+    prompts = _repetitive_prompts(6)
+    lengths = [7, 12, 19, 4, 26, 9]
+    base = [greedy_ref(p, n) for p, n in zip(prompts, lengths)]
+    reqs = _serve(spec_engine,
+                  [Request(p, n) for p, n in zip(prompts, lengths)])
+    assert [r.tokens for r in reqs] == base
+    assert spec_engine.metrics()["pages_in_use"] == 0
+
+
+# ------------------------------------------- cancellation / deferral paths
+def test_spec_cancel_mid_verify_releases_pages(small_model):
+    """Cancel in the window between verify dispatch and its continuation
+    (white-box): the continuation must evict without emitting, and the
+    pages must come back."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=1, max_cache_len=32,
+                      paged=True, page_size=8, speculate=2)
+    try:
+        req = Request(np.arange(4), 10)
+        eng.submit(req)
+        eng.close_intake()
+        eng._admit()
+        assert eng._dispatch_step()             # one verify in flight
+        assert eng._verifying == {0}
+        n_before = req.generated
+        assert req.cancel() is True
+        eng.run(timeout=300)                    # fires _on_verify_done
+        assert req.req_state is RequestState.CANCELLED
+        assert req.generated == n_before        # nothing emitted post-cancel
+        assert eng.stats["retired"] == 0
+        assert eng.stats["cancelled"] >= 1
+        assert req.page_ids == []
+        assert eng.metrics()["pages_in_use"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_spec_cancel_while_decoding(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, max_cache_len=32,
+                      paged=True, page_size=8, speculate=2)
+    try:
+        victim = Request(_repetitive_prompts(1, plen=8)[0], 20)
+        other = Request(np.arange(8) + 40, 6)
+        eng.submit(victim)
+        eng.submit(other)
+        eng.close_intake()
+        eng.run(until=lambda: victim.generated >= 2, timeout=300)
+        victim.cancel()
+        eng.run(timeout=300)
+        assert other.req_state is RequestState.FINISHED
+        assert len(other.tokens) == 6
+        assert victim.page_ids == []
+        assert eng.metrics()["pages_in_use"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_spec_oversubscription_defers_and_stays_exact(small_model,
+                                                      greedy_ref):
+    """Pool smaller than the queue's worst case: capacity deferrals evict
+    admissions back to the queue; all requests complete token-exact with
+    no page leak even though verify steps write past-budget lanes into
+    the scratch page."""
+    cfg, params = small_model
+    prompts = _repetitive_prompts(5, plen=8)
+    base = [greedy_ref(p, 8) for p in prompts]
+    eng = ServeEngine(cfg, params, max_batch=3, max_cache_len=64,
+                      paged=True, page_size=8, max_seq_len=16,
+                      total_pages=4, speculate=3)
+    try:
+        reqs = [Request(p, 8) for p in prompts]
+        for r in reqs:
+            eng.submit(r)
+        eng.close_intake()
+        eng.run(timeout=300)
+        assert [r.tokens for r in reqs] == base
+        m = eng.metrics()
+        assert m["deferred"] > 0
+        assert m["pages_in_use"] == 0
+        assert m["peak_in_use"] <= 4
+    finally:
+        eng.shutdown()
+
+
+def test_spec_near_budget_padding_writes_hit_scratch(small_model,
+                                                     greedy_ref):
+    """max_new smaller than K: every verify step runs with a clamped (or
+    zero) draft window and the K+1-token write lane spills past the
+    request footprint into the scratch page — identity and no leak."""
+    cfg, params = small_model
+    prompt = _repetitive_prompts(1, plen=8)[0]
+    base = greedy_ref(prompt, 2)
+    eng = ServeEngine(cfg, params, max_batch=1, max_cache_len=32,
+                      paged=True, page_size=8, max_seq_len=16,
+                      speculate=3)
+    try:
+        req = Request(prompt, 2)
+        eng.submit(req)
+        eng.close_intake()
+        eng.run(timeout=300)
+        assert req.tokens == base
+        assert req.draft_tokens_proposed == 0   # k capped at remaining-1
+        assert eng.metrics()["pages_in_use"] == 0
+    finally:
+        eng.shutdown()
+
+
+# ------------------------------------------------------------ property test
+@pytest.mark.parametrize("seed", range(4))
+def test_spec_identity_property(spec_engine, greedy_ref, small_model, seed):
+    """Randomized identity sweep: random prompts/lengths/knobs per seed,
+    batched through the shared engine — every stream must equal greedy
+    and the pool must drain. (Deterministic seeds rather than hypothesis:
+    each example costs a model run, and shrinking re-runs are wasted
+    here — any failure is already minimal: one prompt, one knob.)"""
+    cfg, _ = small_model
+    rng = np.random.RandomState(seed)
+    n = int(rng.randint(1, 4))
+    prompts = []
+    for _ in range(n):
+        if rng.rand() < 0.5:        # repetition-friendly half the time
+            motif = rng.randint(0, cfg.vocab_size, size=rng.randint(1, 5))
+            p = np.tile(motif, -(-12 // len(motif)))[:12]
+        else:
+            p = rng.randint(0, cfg.vocab_size, size=12)
+        prompts.append(p.astype(np.int32))
+    lengths = [int(rng.randint(2, 28)) for _ in range(n)]
+    knobs = [rng.choice([0, 1, 2, 3, None]) for _ in range(n)]
+    base = [greedy_ref(p, ln) for p, ln in zip(prompts, lengths)]
+    reqs = _serve(spec_engine,
+                  [Request(p, ln, speculate=None if k is None else int(k))
+                   for p, ln, k in zip(prompts, lengths, knobs)])
+    assert [r.tokens for r in reqs] == base
+    assert spec_engine.metrics()["pages_in_use"] == 0
