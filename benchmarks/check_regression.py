@@ -50,6 +50,16 @@ GATED = {
         lambda d: d["spec"]["speedup_tokens_per_s"], 0.25),
     "spec_accept_rate": (
         lambda d: d["spec"]["speculative"]["accept_rate"], 0.25),
+    # awaitable-bridge notification latency vs the raw callback surface
+    # (core.api.* block), gated as raw/await so higher is better. The API
+    # contract is "await costs <= 25% over raw callbacks" (ratio >= 0.8,
+    # which quiet-machine runs meet at ~0.85-1.0); the extra band to the
+    # 0.7 floor absorbs 2-core CI-runner contention, which hits the
+    # event-loop path harder than the raw loop. A real bridge regression
+    # (e.g. a per-await get_running_loop, ~20us on sandboxed kernels)
+    # lands at 3-8x — far past any band.
+    "await_vs_raw_notify_latency": (
+        lambda d: d["api"]["raw_vs_await_ratio"], 0.3),
 }
 
 # absolute numbers snapshotted alongside (informational only)
@@ -59,6 +69,9 @@ RECORDED = {
     "spec_tokens_per_s": lambda d: d["spec"]["speculative"]["tokens_per_s"],
     "paged_vs_dense_tokens_per_s":
         lambda d: d["paged"]["speedup_tokens_per_s"],
+    "api_raw_callback_us": lambda d: d["api"]["raw_callback_us"],
+    "api_await_bridge_us": lambda d: d["api"]["await_bridge_us"],
+    "api_flags_overhead_ratio": lambda d: d["api"]["flags_overhead_ratio"],
 }
 
 

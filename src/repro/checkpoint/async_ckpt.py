@@ -4,10 +4,14 @@ Fault-tolerance substrate (DESIGN.md §5):
 
 * ``save_async`` snapshots the train state (device→host copies started
   asynchronously), writes one ``.npy`` per leaf on an I/O pool, and attaches
-  a ``continue_all`` over all write ops whose continuation atomically
-  commits the checkpoint (writes ``MANIFEST.json`` + renames the step dir).
-  The trainer keeps stepping; it may ``handle.cr.test()`` at step boundaries
-  (Listing-2 polling-service pattern) or simply ignore the handle.
+  a continuation to ``when_all(write ops)`` that atomically commits the
+  checkpoint (writes ``MANIFEST.json`` + renames the step dir). The
+  registration carries per-registration flags (``enqueue_complete`` — the
+  commit always runs through the continuation path, even when every write
+  finished before registration; ``thread=any`` — I/O threads may run it
+  directly). The trainer keeps stepping; it may ``handle.cr.test()`` at
+  step boundaries (Listing-2 polling-service pattern), ``await
+  handle.promise`` from async code, or simply ignore the handle.
 * A checkpoint without a committed manifest is invisible to
   ``latest_step``/``restore`` — crash-during-save is safe (restart resumes
   from the previous committed step).
@@ -27,7 +31,11 @@ from typing import Any, Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.core import Engine, HostTaskOp, Status
+from repro.core import (THREAD_ANY, ContinueFlags, Engine, HostTaskOp,
+                        Promise, when_all)
+
+# commit-continuation registration flags (see module docstring)
+_COMMIT_FLAGS = ContinueFlags(enqueue_complete=True, thread=THREAD_ANY)
 
 
 def _flatten_with_paths(tree) -> List[tuple]:
@@ -41,10 +49,16 @@ def _flatten_with_paths(tree) -> List[tuple]:
 
 
 class CheckpointHandle:
-    def __init__(self, step: int, directory: str, cr) -> None:
+    """Handle on an in-flight save: pollable (``cr``), blockable
+    (``wait``), and awaitable (``promise`` resolves with the committed
+    directory once the manifest is in place, rejects on write errors)."""
+
+    def __init__(self, step: int, directory: str, cr,
+                 promise: Promise) -> None:
         self.step = step
         self.directory = directory
         self.cr = cr
+        self.promise = promise
         self.committed = threading.Event()
         self.error: Optional[BaseException] = None
 
@@ -73,9 +87,8 @@ class AsyncCheckpointer:
         final_dir = os.path.join(self.base_dir, f"step-{step:08d}")
         os.makedirs(tmp_dir, exist_ok=True)
         leaves = _flatten_with_paths(state)
-        # thread="any": I/O threads may run the commit continuation directly
-        cr = self.engine.continue_init({"mpi_continue_thread": "any"})
-        handle = CheckpointHandle(step, final_dir, cr)
+        cr = self.engine.continue_init()   # plain CR; flags ride the
+        # registration (_COMMIT_FLAGS: thread=any, enqueue_complete)
 
         # start async device→host copies first (non-blocking snapshot)
         host_futs = []
@@ -102,17 +115,17 @@ class AsyncCheckpointer:
 
             ops.append(HostTaskOp(self._pool.submit(write)))
 
-        statuses: List[Optional[Status]] = [None] * len(ops)
+        # the new surface: one when_all composite, a Promise front-end, and
+        # per-registration flags — enqueue_complete means the commit always
+        # flows through the continuation path (no manual "everything was
+        # already done" branch anymore), thread=any lets whatever I/O
+        # thread finishes the last write run the commit directly.
+        writes = Promise.of(self.engine, when_all(ops), cr=cr,
+                            flags=_COMMIT_FLAGS)
+        handle = CheckpointHandle(step, final_dir, cr, writes)
 
-        def commit(stats, _):
-            errs = [s.error for s in stats if s and s.error is not None]
-            if errs:
-                handle.error = errs[0]
-                shutil.rmtree(tmp_dir, ignore_errors=True)
-                handle.committed.set()
-                return
-            self.stats["bytes"] += sum(s.count or (s.payload or 0)
-                                       for s in stats if s)
+        def commit(nbytes: List[int]) -> str:
+            self.stats["bytes"] += sum(n or 0 for n in nbytes)
             with open(os.path.join(tmp_dir, "MANIFEST.json"), "w") as f:
                 json.dump(manifest, f)
             if os.path.exists(final_dir):
@@ -121,11 +134,23 @@ class AsyncCheckpointer:
             self.stats["commits"] += 1
             handle.committed.set()
             self._gc()
+            return final_dir
 
-        flag = self.engine.continue_all(ops, commit, None,
-                                        statuses=statuses, cr=cr)
-        if flag:   # everything finished before registration
-            commit(statuses, None)
+        def failed(exc: BaseException):
+            handle.error = exc
+            shutil.rmtree(tmp_dir, ignore_errors=True)
+            handle.committed.set()
+            raise exc                           # keep the promise rejected
+
+        def commit_failed(exc: BaseException):
+            # a failure in commit itself (manifest write, rename, gc) must
+            # still surface through handle.wait(), not just the promise
+            if handle.error is None:
+                handle.error = exc
+            handle.committed.set()
+            raise exc
+
+        handle.promise = writes.then(commit, failed).catch(commit_failed)
         self.stats["saves"] += 1
         return handle
 

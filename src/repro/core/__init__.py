@@ -4,20 +4,30 @@ The paper's primary contribution, adapted per DESIGN.md §2. Public API
 (names mirror the paper's interface):
 
     engine = Engine()                      # or default_engine()
-    cr = engine.continue_init(info)        # MPIX_Continue_init
-    flag = engine.continue_when(op, cb, cb_data, status, cr)    # MPIX_Continue
-    flag = engine.continue_all(ops, cb, cb_data, statuses, cr)  # MPIX_Continueall
+    cr = engine.continue_init(info)        # MPIX_Continue_init (defaults)
+    flag = engine.continue_when(op, cb, cb_data, status, cr, flags)  # MPIX_Continue
+    flag = engine.continue_all(ops, cb, cb_data, statuses, cr, flags)  # MPIX_Continueall
+    flag = engine.continue_any(ops, cb, ..., indices=idx, cr=cr)   # Testany-style
+    flag = engine.continue_some(ops, k, cb, ..., indices=idx, cr=cr)  # Waitsome-style
     cr.test() / cr.wait() / cr.free()      # MPI_Test / MPI_Wait / Request_free
+
+Per-registration ``ContinueFlags`` override the CR's info defaults
+(``core.flags``); ``when_all``/``when_any``/``when_some`` compose ops into
+new ``Completable``s; ``engine.wrap(op)`` lifts an op into an awaitable,
+chainable ``Promise`` (``core.promise``).
 """
-from repro.core.completable import (ArrayOp, Completable, HostTaskOp,
-                                    PredicateOp, TimerOp)
+from repro.core.completable import (ArrayOp, CombinedOp, Completable,
+                                    HostTaskOp, PredicateOp, TimerOp,
+                                    when_all, when_any, when_some)
 from repro.core.continuation import (CallbackError, ConcurrentCompletionError,
                                      Continuation, ContinuationRequest,
                                      CRState)
 from repro.core.engine import Engine, default_engine, reset_default_engine
+from repro.core.flags import ContinueFlags, ResolvedPolicy, make_flags
 from repro.core.info import (THREAD_ANY, THREAD_APPLICATION, ContinueInfo,
                              make_info)
 from repro.core.progress import Progress
+from repro.core.promise import Promise, PromiseCancelled
 from repro.core.scheduler import (AffinityScheduler, FifoScheduler, Scheduler,
                                   make_scheduler)
 from repro.core.status import STATUS_IGNORE, OpState, Status
@@ -25,12 +35,14 @@ from repro.core.testsome import TestsomeManager
 from repro.core.transport import ANY_SOURCE, ANY_TAG, RecvOp, SendOp, Transport
 
 __all__ = [
-    "ArrayOp", "Completable", "HostTaskOp", "PredicateOp", "TimerOp",
+    "ArrayOp", "CombinedOp", "Completable", "HostTaskOp", "PredicateOp",
+    "TimerOp", "when_all", "when_any", "when_some",
     "CallbackError", "ConcurrentCompletionError", "Continuation",
     "ContinuationRequest", "CRState", "Engine", "default_engine",
     "reset_default_engine", "THREAD_ANY", "THREAD_APPLICATION",
-    "ContinueInfo", "make_info", "STATUS_IGNORE", "OpState", "Status",
-    "Progress", "Scheduler", "FifoScheduler", "AffinityScheduler",
-    "make_scheduler", "TestsomeManager", "ANY_SOURCE", "ANY_TAG", "RecvOp",
-    "SendOp", "Transport",
+    "ContinueInfo", "make_info", "ContinueFlags", "ResolvedPolicy",
+    "make_flags", "STATUS_IGNORE", "OpState", "Status",
+    "Progress", "Promise", "PromiseCancelled", "Scheduler", "FifoScheduler",
+    "AffinityScheduler", "make_scheduler", "TestsomeManager", "ANY_SOURCE",
+    "ANY_TAG", "RecvOp", "SendOp", "Transport",
 ]

@@ -19,6 +19,12 @@ Thread-safety contract (paper §3.3): any number of threads may register
 concurrently; at most one thread may test/wait a given CR at a time (we
 detect violations and raise). Callbacks never run nested inside other
 callbacks (paper §3.1).
+
+Per-registration control (the API-redesign layer, ``core.flags``): each
+``Continuation`` carries a ``ResolvedPolicy`` — the CR's ``ContinueInfo``
+defaults overridden by any ``ContinueFlags`` passed at registration — so
+routing (poll_only queue vs scheduler), thread eligibility, inline
+execution, and error surfacing are decided per registration, not per CR.
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ import threading
 from typing import Any, Callable, List, Optional, Sequence
 
 from repro.core.completable import Completable
+from repro.core.flags import ResolvedPolicy, resolve
 from repro.core.info import ContinueInfo, make_info
 from repro.core.status import OpState, Status
 
@@ -61,16 +68,23 @@ class ContinuationState(enum.Enum):
 class Continuation:
     """One registered callback, possibly spanning several operations."""
 
-    __slots__ = ("cb", "cb_data", "ops", "statuses", "cr", "_remaining",
-                 "_lock", "state", "seqno")
+    __slots__ = ("cb", "cb_data", "ops", "statuses", "cr", "policy",
+                 "_remaining", "_lock", "state", "seqno")
 
     def __init__(self, cb: ContinueCallback, cb_data: Any,
                  ops: Sequence[Completable],
                  statuses: Optional[List[Status]],
-                 cr: "ContinuationRequest") -> None:
+                 cr: "ContinuationRequest",
+                 policy: Optional[ResolvedPolicy] = None) -> None:
         self.cb = cb
         self.cb_data = cb_data
         self.ops = list(ops)
+        # volatile_statuses: the caller's list may be reused immediately
+        # after registration — snapshot into an engine-owned list that the
+        # callback receives instead.
+        self.policy = policy if policy is not None else resolve(cr.info, None)
+        if self.policy.volatile_statuses and statuses is not None:
+            statuses = list(statuses)
         self.statuses = statuses
         self.cr = cr
         self._remaining = len(ops)
@@ -126,6 +140,8 @@ class ContinuationRequest(Completable):
         # CRs route ready continuations to the engine's shared queue.
         self._ready_q: collections.deque[Continuation] = collections.deque()
         self._errors: list[BaseException] = []
+        self._raise_q: list[BaseException] = []   # subset with on_error=raise
+        self._released = False                    # free() fully drained
         self._tester: Optional[int] = None   # thread id currently in test/wait
         # one-shot "drained" observers (CR-as-completable chaining)
         self._empty_hooks: list[Callable[[], None]] = []
@@ -145,34 +161,55 @@ class ContinuationRequest(Completable):
             self.stats["registered"] += count
 
     def _continuation_ready(self, cont: Continuation) -> None:
-        """Routing: poll_only CRs keep their own queue; others go to the
-        engine's scheduler (which may execute inline when policy allows)."""
-        if self.info.poll_only:
+        """Routing, resolved per registration: poll_only continuations go
+        to this CR's private queue; others to the engine's scheduler (which
+        may execute inline when the continuation's policy allows)."""
+        if cont.policy.poll_only:
             with self._lock:
                 self._ready_q.append(cont)
         else:
             self.engine.scheduler.submit(cont)
 
-    def _deregister(self, error: Optional[BaseException]) -> None:
-        """Called by the engine after a continuation executed."""
+    def _deregister(self, error: Optional[BaseException],
+                    policy: Optional["ResolvedPolicy"] = None) -> None:
+        """Called by the engine after a continuation executed.
+
+        ``policy`` carries the registration's error policy; ``None`` falls
+        back to the CR info default (pre-flags callers).
+        """
         hooks: list[Callable[[], None]] = []
+        on_error = self.info.on_error if policy is None else policy.on_error
+        handler = on_error if callable(on_error) else None
         with self._lock:
             self._active -= 1
             self.stats["executed"] += 1
-            if error is not None:
+            if error is not None and handler is None:
                 self._errors.append(error)
+                if on_error == "raise":
+                    self._raise_q.append(error)
             if self._active == 0:
                 if self.cr_state is not CRState.FREED:
                     self.cr_state = CRState.ACTIVE_IDLE
+                elif not self._released:
+                    self._released = True
                 hooks, self._empty_hooks = self._empty_hooks, []
                 self._idle_cond.notify_all()
+        if error is not None and handler is not None:
+            try:
+                handler(error)
+            except Exception:
+                with self._lock:       # a broken handler must not vanish
+                    self._errors.append(error)
         for hook in hooks:
             hook()
 
     def _raise_pending_errors(self) -> None:
-        if self.info.on_error == "raise" and self._errors:
+        if self._raise_q:
             with self._lock:
-                errs, self._errors = self._errors, []
+                errs, self._raise_q = self._raise_q, []
+                raise_set = set(map(id, errs))
+                self._errors = [e for e in self._errors
+                                if id(e) not in raise_set]
             raise CallbackError(
                 f"{len(errs)} continuation callback(s) raised; first error "
                 f"follows") from errs[0]
@@ -227,9 +264,30 @@ class ContinuationRequest(Completable):
                     self._idle_cond.wait(timeout=self.engine.wait_poll_interval)
 
     def free(self) -> None:
-        """``MPI_Request_free`` on an active CR: release once drained."""
+        """``MPI_Request_free`` analogue.
+
+        Drain contract: freeing a CR forbids *new* registrations but lets
+        already-registered continuations run; the CR is *released* when the
+        active set drains. A CR whose active set is already empty releases
+        immediately — ``free()`` on an idle (or never-used) CR must not
+        leave it waiting for a drain that will never happen.
+        """
+        hooks: list[Callable[[], None]] = []
         with self._lock:
             self.cr_state = CRState.FREED
+            if self._active == 0 and not self._released:
+                self._released = True
+                hooks, self._empty_hooks = self._empty_hooks, []
+                self._idle_cond.notify_all()
+        for hook in hooks:
+            hook()
+
+    @property
+    def released(self) -> bool:
+        """True once ``free()`` was called and the active set has drained
+        (immediately, if it was already empty)."""
+        with self._lock:
+            return self._released
 
     # ------------------------------------------------- CR as completable (op)
     # Attaching a continuation to a CR (paper §3.2) observes "the active set

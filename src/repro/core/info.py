@@ -1,5 +1,12 @@
 """Info-key controls for continuation requests (paper §3.5).
 
+These are now the CR-level *defaults*: any individual registration may
+override them with per-registration ``ContinueFlags`` (``core.flags``,
+the ``flags=`` argument of ``continue_when``/``continue_all``/the
+combinators). The MPI-style ``mpi_continue_*`` string keys accepted by
+``make_info`` are deprecated in favour of field-name kwargs, but keep
+working — existing call sites migrate at their own pace.
+
 Five keys, mirrored 1:1 from the paper:
 
 * ``poll_only``          — callbacks run only inside an explicit completion

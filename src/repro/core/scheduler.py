@@ -105,17 +105,36 @@ class Scheduler:
         self._internal_threads.add(threading.get_ident())
 
     def thread_eligible(self, cr: ContinuationRequest) -> bool:
+        """CR-level eligibility (pre-flags compat; prefer ``eligible``)."""
         if in_callback():
             return False  # no nested continuation execution (paper §3.1)
         if threading.get_ident() in self._internal_threads:
             return cr.info.thread == THREAD_ANY
         return True
 
+    def eligible(self, cont: Continuation, inline: bool) -> bool:
+        """May the *current thread* execute this continuation *now*?
+
+        Resolved per registration (``cont.policy``): ``thread`` gates
+        engine-internal threads; ``immediate`` opts out of the
+        registration guard; ``defer_complete`` vetoes the inline
+        discovery path entirely.
+        """
+        if in_callback():
+            return False  # no nested continuation execution (paper §3.1)
+        if in_registration() and not cont.policy.immediate:
+            return False  # inside continue_[all] (paper §3.1)
+        if inline and cont.policy.defer_complete:
+            return False  # must wait for a drain from an entry point
+        if threading.get_ident() in self._internal_threads:
+            return cont.policy.thread == THREAD_ANY
+        return True
+
     # ----------------------------------------------------------- execution
     def submit(self, cont: Continuation) -> None:
-        """A continuation of a non-poll_only CR became ready."""
+        """A continuation of a non-poll_only registration became ready."""
         self._push(cont)
-        if in_registration():
+        if in_registration() and not cont.policy.immediate:
             return  # never execute inside continue_[all] (paper §3.1)
         # Low-latency path: run inline if the current thread is eligible.
         self.drain(limit=self.inline_limit, inline=True)
@@ -126,7 +145,7 @@ class Scheduler:
             err = cont.run()
         finally:
             _TLS.depth -= 1
-        cont.cr._deregister(err)
+        cont.cr._deregister(err, cont.policy)
 
     def drain(self, limit: int = -1, inline: bool = False,
               for_cr: Optional[ContinuationRequest] = None,
@@ -144,7 +163,7 @@ class Scheduler:
             cont = self._pop()
             if cont is None:
                 break
-            if not self.thread_eligible(cont.cr):
+            if not self.eligible(cont, inline):
                 requeue.append(cont)
                 # inline discovery on an ineligible thread: stop early
                 if inline:
@@ -152,8 +171,12 @@ class Scheduler:
                 continue
             if for_cr is not None and cont.cr is for_cr and cr_limit >= 0 \
                     and ran_for_cr >= cr_limit:
+                # over budget for the tested CR: park it, but keep going —
+                # other CRs' ready continuations behind it must still run
+                # (each queue item is popped at most once per drain; the
+                # requeue list is only flushed on exit, so no livelock)
                 requeue.append(cont)
-                break
+                continue
             self.run_one(cont)
             ran += 1
             if for_cr is not None and cont.cr is for_cr:

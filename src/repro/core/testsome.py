@@ -51,12 +51,31 @@ class TestsomeManager:
 
     # -------------------------------------------------------------- submit
     def submit(self, ops: Sequence[Completable], cb: Callback,
-               cb_data: Any = None, want_statuses: bool = False) -> int:
-        """Register a request group whose combined completion triggers ``cb``."""
+               cb_data: Any = None, want_statuses: bool = False,
+               need: Optional[int] = None,
+               indices_out: Optional[List[int]] = None) -> int:
+        """Register a request group whose combined completion triggers ``cb``.
+
+        ``need`` selects first-k-of-n semantics (the engine's
+        ``continue_some`` analogue, kept feature-comparable here): the
+        callback fires when ``need`` ops of the group completed; the
+        group's losers are dropped from the window/pending lists (late
+        completions are ignored). Default: all of them.
+
+        ``indices_out``: caller list rewritten with the completed op
+        indices (completion order, ``MPI_Waitsome`` style) before the
+        callback fires — how first-k callers learn which ops won.
+        """
         gid = next(self._group_seq)
+        k = len(ops) if need is None else int(need)
+        if not 1 <= k <= len(ops):
+            raise ValueError(f"need 1 <= need <= {len(ops)}, got {k}")
         record = {
             "cb": cb, "cb_data": cb_data,
-            "remaining": len(ops),
+            "remaining": k,
+            "ops": list(ops),
+            "indices": [],          # completion order, Waitsome-style
+            "indices_out": indices_out,
             "statuses": [Status() for _ in ops] if want_statuses else None,
             "index": {id(op): i for i, op in enumerate(ops)},
         }
@@ -71,6 +90,20 @@ class TestsomeManager:
             self.stats["submitted"] += len(ops)
         return gid
 
+    def submit_any(self, ops: Sequence[Completable], cb: Callback,
+                   cb_data: Any = None, want_statuses: bool = False,
+                   indices_out: Optional[List[int]] = None) -> int:
+        """First-of-n (``MPI_Testany`` analogue in application space)."""
+        return self.submit(ops, cb, cb_data, want_statuses, need=1,
+                           indices_out=indices_out)
+
+    def submit_some(self, ops: Sequence[Completable], k: int, cb: Callback,
+                    cb_data: Any = None, want_statuses: bool = False,
+                    indices_out: Optional[List[int]] = None) -> int:
+        """First-k-of-n (``MPI_Testsome`` analogue in application space)."""
+        return self.submit(ops, cb, cb_data, want_statuses, need=k,
+                           indices_out=indices_out)
+
     # ------------------------------------------------------------- progress
     def testsome(self) -> int:
         """One progress pass: linear walk of the active window (the
@@ -82,6 +115,7 @@ class TestsomeManager:
             self.stats["test_calls"] += 1
             self.stats["ops_tested"] += len(self._active)
             still_active: List[Completable] = []
+            dropped: set = set()       # loser ops of first-k groups
             for op in self._active:
                 if op.done():
                     gid = self._op_group.pop(id(op), None)
@@ -90,13 +124,25 @@ class TestsomeManager:
                     rec = self._groups[gid]
                     if rec["statuses"] is not None:
                         rec["statuses"][rec["index"][id(op)]] = op.status
+                    rec["indices"].append(rec["index"][id(op)])
                     rec["remaining"] -= 1
                     if rec["remaining"] == 0:
+                        if rec["indices_out"] is not None:
+                            rec["indices_out"][:] = rec["indices"]
                         del self._groups[gid]
+                        # first-k groups: drop the losers everywhere so
+                        # their late completions are ignored
+                        for other in rec["ops"]:
+                            if self._op_group.pop(id(other), None) is not None:
+                                dropped.add(id(other))
                         fired.append((rec["cb"], rec["statuses"], rec["cb_data"]))
                 else:
                     still_active.append(op)
-            self._active = still_active
+            self._active = [op for op in still_active
+                            if id(op) not in dropped]
+            if dropped:
+                self._pending = [op for op in self._pending
+                                 if id(op) not in dropped]
             # promote pending requests into freed window slots
             free = self.window - len(self._active)
             if free > 0 and self._pending:

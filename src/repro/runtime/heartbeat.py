@@ -2,10 +2,14 @@
 
 Every rank periodically sends a heartbeat message; the monitor keeps one
 pre-posted receive per rank whose *continuation* records liveness and
-re-posts itself (the paper's re-post pattern), plus a ``TimerOp``
-continuation chain that sweeps for stale ranks. Failures fire the
-registered callback exactly once per rank — the elastic controller reacts
-by shrinking the mesh (``runtime.elastic``).
+re-posts itself (the paper's re-post pattern), plus a sweep chained on the
+``Promise`` front-end: ``engine.wrap(TimerOp).then(sweep)`` re-arms itself
+each tick. Failures fire the registered callback exactly once per rank —
+the elastic controller reacts by shrinking the mesh (``runtime.elastic``).
+
+Both registrations ride a plain CR with per-registration
+``ContinueFlags(enqueue_complete=True)`` — an already-delivered heartbeat
+or already-expired timer still flows through the continuation path.
 """
 from __future__ import annotations
 
@@ -13,9 +17,12 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional, Set
 
-from repro.core import ANY_SOURCE, Engine, Status, TimerOp, Transport
+from repro.core import (ANY_SOURCE, ContinueFlags, Engine, Status, TimerOp,
+                        Transport)
 
 HEARTBEAT_TAG = 9101
+
+_HB_FLAGS = ContinueFlags(enqueue_complete=True)
 
 
 class HeartbeatSender:
@@ -53,8 +60,8 @@ class HeartbeatMonitor:
         self.failed: Set[int] = set()
         self._lock = threading.Lock()
         self._stopped = False
-        self.cr = engine.continue_init(
-            {"mpi_continue_enqueue_complete": True})
+        self._sweep_error: Optional[BaseException] = None
+        self.cr = engine.continue_init()
         self._post_recv()
         self._post_sweep()
 
@@ -63,7 +70,7 @@ class HeartbeatMonitor:
         op = self.transport.irecv(self.rank, source=ANY_SOURCE,
                                   tag=HEARTBEAT_TAG)
         self.engine.continue_when(op, self._on_beat, status=[None],
-                                  cr=self.cr)
+                                  cr=self.cr, flags=_HB_FLAGS)
 
     def _on_beat(self, statuses, _):
         status: Status = statuses[0]
@@ -74,12 +81,20 @@ class HeartbeatMonitor:
             self.last_seen[rank] = time.monotonic()
         self._post_recv()
 
-    # periodic sweep via timer continuations
+    # periodic sweep via the awaitable front-end: a promise over a TimerOp,
+    # whose then-handler re-arms the chain (registered on this monitor's CR
+    # so ``progress()`` — one ``cr.test()`` — drives the poll-mode timer).
+    # A raising sweep handler (e.g. a broken user on_failure callback) is
+    # caught and re-raised from the next progress() call — same surfacing
+    # the raw-callback CR error policy gave before the promise migration.
     def _post_sweep(self) -> None:
-        self.engine.continue_when(TimerOp(self.sweep_interval_s),
-                                  self._on_sweep, cr=self.cr)
+        (self.engine.wrap(TimerOp(self.sweep_interval_s), cr=self.cr)
+         .then(self._on_sweep).catch(self._record_sweep_error))
 
-    def _on_sweep(self, statuses, _):
+    def _record_sweep_error(self, exc: BaseException) -> None:
+        self._sweep_error = exc
+
+    def _on_sweep(self, _value=None):
         if self._stopped:
             return
         now = time.monotonic()
@@ -95,6 +110,9 @@ class HeartbeatMonitor:
 
     def progress(self) -> None:
         self.cr.test()
+        if self._sweep_error is not None:
+            err, self._sweep_error = self._sweep_error, None
+            raise err
 
     def stop(self) -> None:
         self._stopped = True

@@ -42,10 +42,10 @@ class Batcher:
 
     def __init__(self, engine: Engine) -> None:
         self.engine = engine
-        self.cr = engine.continue_init({
-            "mpi_continue_poll_only": True,
-            "mpi_continue_enqueue_complete": True,
-        })
+        # CR-level defaults (new-style keys; every admission wants both):
+        # individual registrations could override via flags=, but intake
+        # is deliberately uniform
+        self.cr = engine.continue_init(poll_only=True, enqueue_complete=True)
         # only mutated by admission callbacks, i.e. inside cr.test() on the
         # decode-loop thread
         self._pending: collections.deque[Request] = collections.deque()

@@ -62,7 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ArrayOp, Engine, Scheduler
+from repro.core import ArrayOp, ContinueFlags, Engine, Promise, Scheduler
 from repro.models import lm
 from repro.models.common import AUDIO, ModelConfig
 from repro.serve.batcher import Batcher
@@ -72,6 +72,11 @@ from repro.serve.request import Request, RequestState, summarize
 from repro.serve.steps import (make_decode_step, make_paged_decode_step,
                                make_paged_suffix_step, make_paged_verify_step,
                                make_prefill_scatter, make_prefill_step)
+
+# every step/prefill/verify registration: never take the immediate-
+# completion fast path, so bookkeeping always runs through the
+# continuation machinery even when the device raced ahead
+_STEP_FLAGS = ContinueFlags(enqueue_complete=True)
 
 
 class ServeEngine:
@@ -134,10 +139,11 @@ class ServeEngine:
         self.engine = engine if engine is not None else \
             Engine(scheduler=scheduler)
         self.batcher = Batcher(self.engine)
-        # decode-step completions: enqueue_complete so even an
-        # already-materialized step flows through the continuation path
-        self.cr_steps = self.engine.continue_init(
-            {"mpi_continue_enqueue_complete": True})
+        # decode-step completions ride a plain CR; the enqueue_complete
+        # knob (even an already-materialized step flows through the
+        # continuation path) attaches per registration via _STEP_FLAGS —
+        # no dedicated CR per flag combination needed anymore
+        self.cr_steps = self.engine.continue_init()
 
         S = self.max_batch
         self.pool: Optional[PagePool] = None
@@ -227,6 +233,24 @@ class ServeEngine:
                     f"({self.pool.total_pages})")
         return self.batcher.submit(request)
 
+    def submit_async(self, request: Request) -> Promise:
+        """Submit and get an awaitable ``Promise`` for the request.
+
+        The promise resolves with the generated token list at retirement
+        (a ``Request`` is a ``Completable``; its completion payload is the
+        tokens) and rejects with ``PromiseCancelled`` if the request is
+        cancelled. ``promise.cancel()`` cancels the request. Awaitable from
+        asyncio (loop-safe wakeups) or blockable via ``promise.result()``
+        — but never from the decode-loop thread itself.
+        """
+        # submit first: a rejected submit (seq-len/page validation, closed
+        # intake) must not leave a never-settling registration on the
+        # promise CR. Wrap-after-submit is safe — the resolution
+        # registration uses enqueue_complete, so a request that races to
+        # retirement still resolves through the continuation path.
+        self.submit(request)
+        return self.engine.wrap(request)
+
     def close_intake(self) -> None:
         self.batcher.close()
 
@@ -293,7 +317,7 @@ class ServeEngine:
             self.stats["prefills"] += 1
             self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
                                       (req, True, None, None),
-                                      cr=self.cr_steps)
+                                      cr=self.cr_steps, flags=_STEP_FLAGS)
             return True
 
         self._ensure_state()
@@ -325,7 +349,8 @@ class ServeEngine:
             self._ctx[slot] = [int(t) for t in
                                np.asarray(req.prompt, np.int32).reshape(-1)]
         self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
-                                  (req, False, slot, first), cr=self.cr_steps)
+                                  (req, False, slot, first),
+                                  cr=self.cr_steps, flags=_STEP_FLAGS)
         return True
 
     def _prefill_paged(self, req: Request,
@@ -449,7 +474,8 @@ class ServeEngine:
         self.stats["padded_steps"] += self.max_batch - len(live)
         self.stats["max_active"] = max(self.stats["max_active"], len(live))
         self.engine.continue_when(ArrayOp(nxt), self._on_step_done,
-                                  finishing, cr=self.cr_steps)
+                                  finishing, cr=self.cr_steps,
+                                  flags=_STEP_FLAGS)
         return True
 
     def _on_step_done(self, statuses,
@@ -518,7 +544,7 @@ class ServeEngine:
         self.stats["max_active"] = max(self.stats["max_active"], len(live))
         self.engine.continue_when(ArrayOp(emitted), self._on_verify_done,
                                   (live, emitted, accepts, n_drafts),
-                                  cr=self.cr_steps)
+                                  cr=self.cr_steps, flags=_STEP_FLAGS)
         return True
 
     def _on_verify_done(self, statuses, meta) -> None:

@@ -1,0 +1,111 @@
+"""Hypothesis properties for continue_any/continue_some under
+sequential interleavings and concurrent completion (ISSUE-4 satellite).
+
+Mirrors the always-running seeded sweeps in ``test_combinators.py``; this
+module explores the same invariants with hypothesis-driven shrinking when
+the optional dependency is installed.
+"""
+import threading
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (pip install hypothesis)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import Engine, Status  # noqa: E402
+from repro.core.completable import Completable  # noqa: E402
+
+
+class ManualOp(Completable):
+    @property
+    def supports_push(self):
+        return True
+
+    def trigger(self, status: Status = None):
+        self._complete(status or Status())
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(2, 6), k_frac=st.floats(0.0, 1.0),
+       order=st.randoms(use_true_random=False))
+def test_some_sequential_interleavings(n, k_frac, order):
+    """Any completion order: fires exactly once at the k-th completion,
+    winners' statuses/indices consistent, losers released and silent."""
+    k = max(1, min(n, int(k_frac * n) + 1))
+    eng = Engine()
+    try:
+        cr = eng.continue_init()
+        ops = [ManualOp() for _ in range(n)]
+        fired = []
+        statuses = [None] * n
+        indices = []
+        eng.continue_some(ops, k, lambda st, d: fired.append(list(indices)),
+                          statuses=statuses, indices=indices, cr=cr)
+        perm = list(range(n))
+        order.shuffle(perm)
+        for step, i in enumerate(perm):
+            ops[i].trigger(Status(payload=i))
+            eng.tick()
+            if step + 1 < k:
+                assert fired == []
+            else:
+                assert len(fired) == 1           # never a double-fire
+        assert sorted(fired[0]) == sorted(perm[:k])
+        assert indices == perm[:k]               # completion order
+        for i in range(n):
+            if i in perm[:k]:
+                assert statuses[i].payload == i
+            else:
+                assert statuses[i] is None
+                assert not ops[i]._attached      # no attachment leak
+        assert cr.test() is True
+    finally:
+        eng.shutdown()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 8), k_frac=st.floats(0.0, 1.0),
+       seed=st.integers(0, 2**16))
+def test_some_concurrent_completion(n, k_frac, seed):
+    """All n ops complete simultaneously from n threads: the callback
+    still fires exactly once with exactly k winners; losers never run a
+    callback and end up released."""
+    import random
+    k = max(1, min(n, int(k_frac * n) + 1))
+    eng = Engine()
+    try:
+        cr = eng.continue_init()
+        ops = [ManualOp() for _ in range(n)]
+        fired = []
+        fired_lock = threading.Lock()
+        indices = []
+
+        def cb(st_, d):
+            with fired_lock:
+                fired.append(list(indices))
+
+        eng.continue_some(ops, k, cb, indices=indices, cr=cr)
+        barrier = threading.Barrier(n)
+        rng = random.Random(seed)
+        shuffled = list(ops)
+        rng.shuffle(shuffled)
+
+        def completer(op):
+            barrier.wait()
+            op.trigger()
+
+        threads = [threading.Thread(target=completer, args=(op,))
+                   for op in shuffled]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert cr.wait(timeout=10)
+        assert len(fired) == 1                   # exactly once
+        assert len(fired[0]) == k
+        assert len(set(fired[0])) == k
+        attached = sum(1 for op in ops if op._attached)
+        assert attached == k                     # losers all released
+    finally:
+        eng.shutdown()

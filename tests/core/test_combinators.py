@@ -1,0 +1,385 @@
+"""when_all/when_any/when_some combinators, continue_any/continue_some,
+and the TestsomeManager first-k analogues — including hypothesis
+properties under concurrent completion."""
+import threading
+
+import pytest
+
+from repro.core import (CombinedOp, Engine, Status, TestsomeManager,
+                        when_all, when_any, when_some)
+from repro.core.completable import Completable
+from repro.core.status import OpState
+
+
+class ManualOp(Completable):
+    def __init__(self, push: bool = True):
+        super().__init__()
+        self._push = push
+        self.flag = False
+
+    @property
+    def supports_push(self):
+        return self._push
+
+    def trigger(self, status: Status = None):
+        if self._push:
+            self._complete(status or Status())
+        else:
+            self.flag = True
+
+    def _poll(self):
+        return self.flag
+
+
+@pytest.fixture
+def engine():
+    eng = Engine()
+    yield eng
+    eng.shutdown()
+
+
+# ------------------------------------------------------------------- units
+def test_when_any_winner_and_loser_release():
+    ops = [ManualOp() for _ in range(3)]
+    comb = when_any(ops)
+    assert all(op._attached for op in ops)       # construction consumes
+    ops[1].trigger(Status(payload="won"))
+    assert comb.state is OpState.COMPLETE
+    assert comb.status.payload == "won"
+    assert comb.indices == [1]
+    assert ops[1]._attached                      # winner stays consumed
+    assert not ops[0]._attached and not ops[2]._attached   # losers released
+    # late loser completions are ignored — no state change, no refire
+    ops[0].trigger(Status(payload="late"))
+    assert comb.status.payload == "won" and comb.indices == [1]
+
+
+def test_when_some_payload_pairs_and_order():
+    ops = [ManualOp() for _ in range(4)]
+    comb = when_some(ops, 2)
+    ops[3].trigger(Status(payload="d"))
+    assert comb.state is OpState.PENDING
+    ops[0].trigger(Status(payload="a"))
+    assert comb.state is OpState.COMPLETE
+    assert comb.indices == [3, 0]                # completion order
+    assert comb.status.payload == [(3, "d"), (0, "a")]
+    assert comb.op_statuses[1] is None and comb.op_statuses[2] is None
+
+
+def test_when_all_payload_list_in_op_order():
+    ops = [ManualOp() for _ in range(3)]
+    comb = when_all(ops)
+    for i in (2, 0, 1):
+        ops[i].trigger(Status(payload=i * 10))
+    assert comb.status.payload == [0, 10, 20]    # op order, not completion
+    # single-op when_all still yields a (1-element) list
+    solo = ManualOp()
+    comb1 = when_all([solo])
+    solo.trigger(Status(payload=7))
+    assert comb1.status.payload == [7]
+
+
+def test_when_any_cancel_losers():
+    ops = [ManualOp() for _ in range(3)]
+    when_any(ops, cancel_losers=True)
+    ops[0].trigger()
+    assert ops[1].state is OpState.CANCELLED
+    assert ops[2].state is OpState.CANCELLED
+
+
+def test_when_all_error_propagates():
+    ops = [ManualOp(), ManualOp()]
+    comb = when_all(ops)
+    ops[0].trigger(Status(payload=1))
+    err = RuntimeError("shard write failed")
+    ops[1].trigger(Status(error=err))
+    assert comb.state is OpState.FAILED
+    assert comb.status.error is err
+
+
+def test_combined_cancel_cancels_pending_children():
+    ops = [ManualOp() for _ in range(2)]
+    comb = when_all(ops)
+    ops[0].trigger()
+    assert comb.cancel() is True
+    assert comb.state is OpState.CANCELLED
+    assert ops[1].state is OpState.CANCELLED
+    assert comb.cancel() is False                # already settled
+
+
+def test_combined_poll_mode_children(engine):
+    """Poll-mode children are driven through the composite by progress
+    scans — the composite is the only op the engine watches."""
+    cr = engine.continue_init()
+    ops = [ManualOp(push=False) for _ in range(2)]
+    seen = []
+    engine.continue_when(when_all(ops), lambda st, d: seen.append("all"),
+                         cr=cr)
+    engine.tick()
+    assert seen == []
+    for op in ops:
+        op.trigger()                             # flips the poll flag only
+    engine.tick()
+    assert seen == ["all"]
+
+
+def test_combined_validation():
+    with pytest.raises(ValueError):
+        CombinedOp([ManualOp()], 2)
+    with pytest.raises(ValueError):
+        CombinedOp([ManualOp()], 0)
+
+
+# -------------------------------------------------------- engine front-ends
+def test_continue_any_reports_indices_and_statuses(engine):
+    cr = engine.continue_init()
+    ops = [ManualOp() for _ in range(3)]
+    statuses = [None] * 3
+    indices = []
+    fired = []
+    flag = engine.continue_any(ops, lambda st, d: fired.append(list(indices)),
+                               statuses=statuses, indices=indices, cr=cr)
+    assert flag is False
+    ops[2].trigger(Status(payload="w"))
+    assert fired == [[2]]                        # reported before the cb ran
+    assert indices == [2]
+    assert statuses[2].payload == "w"
+    assert statuses[0] is None and statuses[1] is None
+    ops[0].trigger()                             # loser: cb never re-fires
+    engine.tick()
+    assert fired == [[2]]
+
+
+def test_continue_some_immediate_path(engine):
+    cr = engine.continue_init()
+    ops = [ManualOp() for _ in range(3)]
+    ops[0].trigger(Status(payload="a"))
+    ops[1].trigger(Status(payload="b"))
+    indices = []
+    statuses = [None] * 3
+    seen = []
+    flag = engine.continue_some(ops, 2, lambda st, d: seen.append(d),
+                                statuses=statuses, indices=indices, cr=cr)
+    assert flag is True and seen == []           # immediate: cb not invoked
+    assert sorted(indices) == [0, 1]
+    assert statuses[0].payload == "a" and statuses[1].payload == "b"
+    assert not ops[2]._attached                  # loser released
+
+
+def test_continue_some_losers_attachment_released(engine):
+    cr = engine.continue_init()
+    ops = [ManualOp() for _ in range(4)]
+    engine.continue_some(ops, 2, lambda st, d: None, cr=cr)
+    ops[1].trigger()
+    ops[3].trigger()
+    assert cr.test() is True
+    for i, op in enumerate(ops):
+        assert op._attached == (i in (1, 3))
+    # released losers are re-registrable
+    done = []
+    engine.continue_when(ops[0], lambda st, d: done.append(1), cr=cr)
+    ops[0].trigger()
+    assert done == [1]
+
+
+# -------------------------------------------- TestsomeManager first-k analogue
+def test_testsome_submit_any_drops_losers():
+    mgr = TestsomeManager(window=8)
+    ops = [ManualOp(push=False) for _ in range(4)]
+    fired = []
+    idx = []
+    mgr.submit_any(ops, lambda st, d: fired.append(d), "grp",
+                   indices_out=idx)
+    ops[2].flag = True
+    mgr.testsome()
+    assert fired == ["grp"]
+    assert idx == [2]                            # winner reported
+    assert mgr.outstanding == 0
+    # losers no longer tracked: completing them fires nothing
+    for op in ops:
+        op.flag = True
+    mgr.testsome()
+    assert fired == ["grp"]
+    mgr.drain()                                  # converges immediately
+
+
+def test_testsome_submit_some_statuses():
+    mgr = TestsomeManager(window=8)
+    ops = [ManualOp(push=False) for _ in range(3)]
+    got = []
+    idx = []
+    mgr.submit_some(ops, 2, lambda st, d: got.append(st), want_statuses=True,
+                    indices_out=idx)
+    ops[0].flag = True
+    ops[2].flag = True
+    mgr.testsome()
+    assert len(got) == 1
+    assert sorted(idx) == [0, 2]
+    mgr.drain()
+
+
+def test_testsome_need_validation():
+    mgr = TestsomeManager()
+    with pytest.raises(ValueError):
+        mgr.submit([ManualOp()], lambda st, d: None, need=2)
+
+
+# ---------------------------------------- seeded property sweeps (always run)
+# The hypothesis variants live in test_combinator_properties.py (optional
+# dependency); these seeded sweeps keep the same invariants exercised in
+# environments without it.
+def test_some_sequential_interleavings_sweep():
+    import random
+    rng = random.Random(1234)
+    for trial in range(60):
+        n = rng.randint(2, 6)
+        k = rng.randint(1, n)
+        eng = Engine()
+        try:
+            cr = eng.continue_init()
+            ops = [ManualOp() for _ in range(n)]
+            fired = []
+            statuses = [None] * n
+            indices = []
+            eng.continue_some(ops, k,
+                              lambda st, d: fired.append(list(indices)),
+                              statuses=statuses, indices=indices, cr=cr)
+            perm = list(range(n))
+            rng.shuffle(perm)
+            for step, i in enumerate(perm):
+                ops[i].trigger(Status(payload=i))
+                eng.tick()
+                assert len(fired) == (0 if step + 1 < k else 1)
+            assert indices == perm[:k]
+            for i in range(n):
+                if i in perm[:k]:
+                    assert statuses[i].payload == i
+                else:
+                    assert statuses[i] is None
+                    assert not ops[i]._attached
+            assert cr.test() is True
+        finally:
+            eng.shutdown()
+
+
+def test_some_concurrent_completion_sweep():
+    import random
+    rng = random.Random(99)
+    for trial in range(20):
+        n = rng.randint(2, 8)
+        k = rng.randint(1, n)
+        eng = Engine()
+        try:
+            cr = eng.continue_init()
+            ops = [ManualOp() for _ in range(n)]
+            fired = []
+            lock = threading.Lock()
+            indices = []
+
+            def cb(st_, d):
+                with lock:
+                    fired.append(list(indices))
+
+            eng.continue_some(ops, k, cb, indices=indices, cr=cr)
+            barrier = threading.Barrier(n)
+            shuffled = list(ops)
+            rng.shuffle(shuffled)
+
+            def completer(op):
+                barrier.wait()
+                op.trigger()
+
+            threads = [threading.Thread(target=completer, args=(op,))
+                       for op in shuffled]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert cr.wait(timeout=10)
+            assert len(fired) == 1
+            assert len(set(fired[0])) == len(fired[0]) == k
+            assert sum(1 for op in ops if op._attached) == k
+        finally:
+            eng.shutdown()
+
+
+def test_combinator_ctor_rollback_on_consumed_child():
+    """Regression (review): CombinedOp construction failing partway must
+    release the already-marked prefix, like Engine.continue_all."""
+    good = [ManualOp(), ManualOp()]
+    used = ManualOp()
+    used.mark_attached()
+    with pytest.raises(RuntimeError, match="already has a continuation"):
+        when_all(good + [used])
+    assert not good[0]._attached and not good[1]._attached
+    comb = when_all(good)                        # prefix usable again
+    for op in good:
+        op.trigger()
+    assert comb.state is OpState.COMPLETE
+
+
+def test_continue_some_rollback_releases_children(engine):
+    """Regression (review): a failed continue_some registration (freed
+    CR) must hand the children back, not just the composite."""
+    cr = engine.continue_init()
+    cr.free()
+    ops = [ManualOp() for _ in range(3)]
+    with pytest.raises(RuntimeError, match="freed"):
+        engine.continue_some(ops, 2, lambda st, d: None, cr=cr)
+    assert all(not op._attached for op in ops)
+    # children usable on a live CR afterwards
+    cr2 = engine.continue_init()
+    seen = []
+    engine.continue_some(ops, 2, lambda st, d: seen.append(1), cr=cr2)
+    ops[0].trigger()
+    ops[1].trigger()
+    assert seen == [1]
+
+
+def test_when_all_empty_completes_vacuously(engine):
+    """Regression (review): when_all([]) must mirror continue_all([],...)'s
+    immediate completion, not raise — e.g. checkpointing a leafless state."""
+    comb = when_all([])
+    assert comb.state is OpState.COMPLETE
+    assert comb.status.payload == []
+    # and through the promise front-end
+    assert engine.wrap(when_all([])).result(timeout=5) == []
+    with pytest.raises(ValueError):
+        when_any([])                     # racing zero candidates: loud error
+
+
+def test_when_any_single_element_payload_shape():
+    """Regression (review): when_any([op]) yields the bare winner payload,
+    same shape as any larger group."""
+    op = ManualOp()
+    comb = when_any([op])
+    op.trigger(Status(payload="solo"))
+    assert comb.status.payload == "solo"         # not ["solo"]
+
+
+def test_when_some_payload_always_pairs():
+    ops = [ManualOp(), ManualOp()]
+    comb = when_some(ops, 2)                     # k == n, still pairs
+    ops[1].trigger(Status(payload="b"))
+    ops[0].trigger(Status(payload="a"))
+    assert comb.status.payload == [(1, "b"), (0, "a")]
+
+
+def test_rollback_composite_is_neutralized(engine):
+    """Regression (review): after a failed continue_some registration the
+    orphaned composite must not release/cancel the children when they
+    later complete under a new registration."""
+    cr = engine.continue_init()
+    cr.free()
+    ops = [ManualOp() for _ in range(3)]
+    with pytest.raises(RuntimeError, match="freed"):
+        engine.continue_some(ops, 2, lambda st, d: None, cr=cr,
+                             cancel_losers=True)
+    cr2 = engine.continue_init()
+    seen = []
+    engine.continue_some(ops, 2, lambda st, d: seen.append(1), cr=cr2)
+    ops[0].trigger()
+    ops[1].trigger()                 # zombie would release/cancel ops[2]
+    assert seen == [1]
+    assert ops[2].state is OpState.PENDING       # not spuriously cancelled
+    assert not ops[2]._attached                  # released by the LIVE comb

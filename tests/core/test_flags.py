@@ -1,0 +1,297 @@
+"""Per-registration ContinueFlags: overrides of the CR info defaults,
+plus the registration-failure rollback and free()-on-idle regressions."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (ContinueFlags, CRState, Engine, Status, make_flags,
+                        make_info)
+from repro.core.completable import Completable
+from repro.core.flags import merge_flags, resolve
+
+
+class ManualOp(Completable):
+    def __init__(self, push: bool = True):
+        super().__init__()
+        self._push = push
+        self.flag = False
+
+    @property
+    def supports_push(self):
+        return self._push
+
+    def trigger(self, status: Status = None):
+        if self._push:
+            self._complete(status or Status())
+        else:
+            self.flag = True
+
+    def _poll(self):
+        return self.flag
+
+
+@pytest.fixture
+def engine():
+    eng = Engine()
+    yield eng
+    eng.shutdown()
+
+
+# ------------------------------------------------------------- resolution
+def test_flags_override_cr_defaults():
+    info = make_info(enqueue_complete=True, poll_only=True,
+                     on_error="collect")
+    # no flags: inherit everything
+    p = resolve(info, None)
+    assert (p.enqueue_complete, p.poll_only, p.on_error) == \
+        (True, True, "collect")
+    # partial flags: only the named fields flip
+    p = resolve(info, ContinueFlags(enqueue_complete=False))
+    assert p.enqueue_complete is False
+    assert p.poll_only is True                   # untouched default
+    p = resolve(info, ContinueFlags(poll_only=False, on_error="raise"))
+    assert (p.poll_only, p.on_error) == (False, "raise")
+    assert p.enqueue_complete is True
+
+
+def test_make_flags_accepts_mpi_style_keys_and_kwargs():
+    f = make_flags({"mpi_continue_enqueue_complete": "true",
+                    "mpi_continue_defer_complete": 1})
+    assert f.enqueue_complete is True and f.defer_complete is True
+    f = make_flags(poll_only=True)
+    assert f.poll_only is True and f.enqueue_complete is None
+    with pytest.raises(KeyError):
+        make_flags({"mpi_continue_bogus": True})
+    assert make_flags(None) is None
+
+
+def test_flags_validation():
+    with pytest.raises(ValueError):
+        ContinueFlags(immediate=True, defer_complete=True)
+    with pytest.raises(ValueError):
+        ContinueFlags(thread="bogus")
+    with pytest.raises(ValueError):
+        ContinueFlags(on_error="explode")
+
+
+def test_merge_flags_override_wins():
+    base = ContinueFlags(enqueue_complete=True, immediate=True)
+    over = ContinueFlags(thread="any", immediate=False)
+    m = merge_flags(base, over)
+    assert (m.enqueue_complete, m.immediate, m.thread) == (True, False, "any")
+    assert merge_flags(None, over) is over
+    assert merge_flags(base, None) is base
+
+
+# ------------------------------------------------- per-registration behavior
+def test_enqueue_complete_flag_overrides_cr_default(engine):
+    cr = engine.continue_init()                  # CR default: fast path on
+    op = ManualOp()
+    op.trigger()
+    seen = []
+    flag = engine.continue_when(op, lambda st, d: seen.append(d), "x", cr=cr,
+                                flags=ContinueFlags(enqueue_complete=True))
+    assert flag is False and seen == []          # forced through the queue
+    engine.tick()
+    assert seen == ["x"]
+
+    # and the reverse: CR says enqueue, registration opts back into the
+    # fast path — previously this required a second CR
+    cr2 = engine.continue_init(enqueue_complete=True)
+    op2 = ManualOp()
+    op2.trigger()
+    flag = engine.continue_when(op2, lambda st, d: seen.append(d), "y",
+                                cr=cr2,
+                                flags=ContinueFlags(enqueue_complete=False))
+    assert flag is True and seen == ["x"]        # callback not invoked
+
+
+def test_poll_only_flag_on_plain_cr(engine):
+    """One CR, mixed routing: a poll_only registration runs only inside
+    cr.test(); a default registration still runs inline."""
+    cr = engine.continue_init()
+    seen = []
+    op_poll = ManualOp()
+    engine.continue_when(op_poll, lambda st, d: seen.append("poll"), cr=cr,
+                         flags=ContinueFlags(poll_only=True))
+    op_inline = ManualOp()
+    engine.continue_when(op_inline, lambda st, d: seen.append("inline"),
+                         cr=cr)
+    op_inline.trigger()
+    assert seen == ["inline"]
+    op_poll.trigger()
+    assert seen == ["inline"]                    # parked on the CR queue
+    engine.tick()
+    assert seen == ["inline"]                    # tick must NOT run it
+    cr.test()
+    assert seen == ["inline", "poll"]
+
+
+def test_defer_complete_never_inline_at_discovery(engine):
+    cr = engine.continue_init()
+    seen = []
+    op = ManualOp()
+    engine.continue_when(op, lambda st, d: seen.append(d), "d", cr=cr,
+                         flags=ContinueFlags(defer_complete=True))
+    op.trigger()                                 # discovery thread = us
+    assert seen == []                            # not run inline
+    engine.tick()
+    assert seen == ["d"]
+
+
+def test_immediate_runs_inside_registration(engine):
+    """immediate=True opts out of the §3.1 registration guard: an
+    already-complete op registered with enqueue_complete runs its callback
+    before continue_when returns."""
+    cr = engine.continue_init()
+    op = ManualOp()
+    op.trigger()
+    seen = []
+    flag = engine.continue_when(
+        op, lambda st, d: seen.append(d), "now", cr=cr,
+        flags=ContinueFlags(enqueue_complete=True, immediate=True))
+    assert flag is False
+    assert seen == ["now"]                       # ran during registration
+
+
+def test_volatile_statuses_snapshot(engine):
+    cr = engine.continue_init()
+    op = ManualOp()
+    mine = [None]
+    got = []
+    engine.continue_when(op, lambda st, d: got.append(st), status=mine,
+                         cr=cr, flags=ContinueFlags(volatile_statuses=True))
+    mine[0] = "caller reused this slot"          # legal under volatile
+    op.trigger()
+    assert isinstance(got[0][0], Status)         # engine-owned snapshot
+    assert mine[0] == "caller reused this slot"  # caller list untouched
+
+
+def test_on_error_callable_handler(engine):
+    cr = engine.continue_init()                  # CR default on_error=raise
+    caught = []
+    op = ManualOp()
+    engine.continue_when(op, lambda st, d: 1 / 0, cr=cr,
+                         flags=ContinueFlags(on_error=caught.append))
+    op.trigger()
+    assert len(caught) == 1 and isinstance(caught[0], ZeroDivisionError)
+    assert cr.test() is True                     # nothing pending to raise
+    assert cr.errors == []
+
+
+def test_on_error_flag_overrides_cr(engine):
+    from repro.core import CallbackError
+    # collect-by-default CR, raise-flagged registration
+    cr = engine.continue_init(on_error="collect")
+    op = ManualOp()
+    engine.continue_when(op, lambda st, d: 1 / 0, cr=cr,
+                         flags=ContinueFlags(on_error="raise"))
+    op.trigger()
+    with pytest.raises(CallbackError):
+        cr.test()
+    # raise-by-default CR, collect-flagged registration
+    cr2 = engine.continue_init()
+    op2 = ManualOp()
+    engine.continue_when(op2, lambda st, d: 1 / 0, cr=cr2,
+                         flags=ContinueFlags(on_error="collect"))
+    op2.trigger()
+    assert cr2.test() is True
+    assert len(cr2.errors) == 1
+
+
+def test_thread_any_flag_runs_on_internal_thread():
+    eng = Engine(progress_thread=True, progress_interval=1e-4)
+    try:
+        cr = eng.continue_init()                 # default thread=application
+        ran_on = []
+        op = ManualOp(push=False)
+        eng.continue_when(op, lambda st, d: ran_on.append(
+            threading.get_ident()), cr=cr,
+            flags=ContinueFlags(thread="any"))
+        op.trigger()                             # poll-mode: flag only
+        deadline = time.monotonic() + 5.0
+        while not ran_on and time.monotonic() < deadline:
+            time.sleep(1e-3)                     # never calls into engine
+        assert ran_on and ran_on[0] != threading.get_ident()
+    finally:
+        eng.shutdown()
+
+
+# --------------------------------------------------------------- satellites
+def test_mark_attached_rollback_on_registration_failure(engine):
+    """Regression: a failing continue_all must release the already-marked
+    prefix — previously those ops stayed consumed."""
+    cr = engine.continue_init()
+    good = [ManualOp() for _ in range(2)]
+    used = ManualOp()
+    used.mark_attached()                         # will fail mid-loop
+    with pytest.raises(RuntimeError, match="already has a continuation"):
+        engine.continue_all(good + [used], lambda st, d: None, cr=cr)
+    # the prefix is usable again
+    seen = []
+    assert engine.continue_all(
+        good, lambda st, d: seen.append("ok"), cr=cr) is False
+    for op in good:
+        op.trigger()
+    assert seen == ["ok"]
+
+
+def test_free_on_idle_cr_releases_immediately(engine):
+    """Regression: free() on a CR with an empty active set used to leave
+    it waiting for a drain that would never happen."""
+    cr = engine.continue_init()
+    assert cr.released is False
+    cr.free()
+    assert cr.released is True                   # released right away
+    assert cr.cr_state is CRState.FREED
+
+    # active CR: released only once the set drains
+    cr2 = engine.continue_init()
+    op = ManualOp()
+    engine.continue_when(op, lambda st, d: None, cr=cr2)
+    cr2.free()
+    assert cr2.released is False
+    op.trigger()
+    assert cr2.released is True
+
+
+def test_register_on_freed_cr_releases_ops(engine):
+    """Regression (review): registration failing at cr._register (freed
+    CR) must not leave the ops consumed."""
+    cr = engine.continue_init()
+    cr.free()
+    op = ManualOp()
+    with pytest.raises(RuntimeError, match="freed"):
+        engine.continue_when(op, lambda st, d: None, cr=cr)
+    assert not op._attached
+    cr2 = engine.continue_init()
+    seen = []
+    engine.continue_when(op, lambda st, d: seen.append(1), cr=cr2)
+    op.trigger()
+    assert seen == [1]
+
+
+def test_max_poll_cap_does_not_starve_other_crs(engine):
+    """Regression (review): hitting the tested CR's max_poll cap must not
+    skip other CRs' ready continuations queued behind it."""
+    capped = engine.continue_init(poll_only=True, max_poll=1)
+    other = engine.continue_init(
+        enqueue_complete=True, poll_only=False)
+    seen = []
+    # two poll_only continuations on the capped CR (private queue)...
+    for i in range(2):
+        op = ManualOp()
+        engine.continue_when(op, lambda st, d, i=i: seen.append(("cap", i)),
+                             cr=capped)
+        op.trigger()
+    # ...and one from another CR parked on the scheduler queue
+    op2 = ManualOp()
+    engine.continue_when(op2, lambda st, d: seen.append("other"), cr=other,
+                         flags=ContinueFlags(defer_complete=True))
+    op2.trigger()
+    capped.test()     # budget 1: one capped callback AND the other CR's
+    assert ("cap", 0) in seen and "other" in seen
+    assert ("cap", 1) not in seen
+    capped.test()
+    assert ("cap", 1) in seen

@@ -1,0 +1,296 @@
+"""Promise front-end: chaining, cancellation, sync wait, asyncio bridge."""
+import asyncio
+import threading
+import time
+
+import pytest
+
+from repro.core import (Engine, Promise, PromiseCancelled, Status, TimerOp,
+                        when_all)
+from repro.core.completable import Completable
+from repro.core.status import OpState
+
+
+class ManualOp(Completable):
+    def __init__(self, push: bool = True):
+        super().__init__()
+        self._push = push
+        self.flag = False
+
+    @property
+    def supports_push(self):
+        return self._push
+
+    def trigger(self, status: Status = None):
+        if self._push:
+            self._complete(status or Status())
+        else:
+            self.flag = True
+
+    def _poll(self):
+        return self.flag
+
+
+@pytest.fixture
+def engine():
+    eng = Engine()
+    yield eng
+    eng.shutdown()
+
+
+# ----------------------------------------------------------------- basics
+def test_wrap_resolves_with_payload(engine):
+    op = ManualOp()
+    p = engine.wrap(op)
+    assert p.state == "pending" and not p.done()
+    op.trigger(Status(payload={"tok": [1, 2]}))
+    assert p.done()
+    assert p.result(timeout=5) == {"tok": [1, 2]}
+
+
+def test_wrap_already_complete_op(engine):
+    op = ManualOp()
+    op.trigger(Status(payload="early"))
+    p = engine.wrap(op)
+    assert p.result(timeout=5) == "early"
+
+
+def test_wrap_failed_op_rejects(engine):
+    op = ManualOp()
+    p = engine.wrap(op)
+    op._complete(Status(error=ValueError("boom")), OpState.FAILED)
+    with pytest.raises(ValueError, match="boom"):
+        p.result(timeout=5)
+
+
+def test_result_timeout(engine):
+    p = engine.wrap(ManualOp())
+    with pytest.raises(TimeoutError):
+        p.result(timeout=0.05)
+
+
+# --------------------------------------------------------------- chaining
+def test_then_chain_values(engine):
+    op = ManualOp()
+    out = engine.wrap(op).then(lambda v: v + 1).then(lambda v: v * 10)
+    op.trigger(Status(payload=4))
+    assert out.result(timeout=5) == 50
+
+
+def test_then_handler_raise_rejects_child(engine):
+    op = ManualOp()
+    child = engine.wrap(op).then(lambda v: 1 / 0)
+    op.trigger(Status(payload=1))
+    with pytest.raises(ZeroDivisionError):
+        child.result(timeout=5)
+
+
+def test_catch_recovers(engine):
+    op = ManualOp()
+    out = (engine.wrap(op)
+           .then(lambda v: (_ for _ in ()).throw(RuntimeError("bad")))
+           .catch(lambda exc: "recovered")
+           .then(lambda v: v + "!"))
+    op.trigger()
+    assert out.result(timeout=5) == "recovered!"
+
+
+def test_catch_skipped_on_fulfilment(engine):
+    op = ManualOp()
+    seen = []
+    out = engine.wrap(op).catch(lambda exc: seen.append(exc)).then(
+        lambda v: "through")
+    op.trigger(Status(payload="v"))
+    assert out.result(timeout=5) == "through" and seen == []
+
+
+def test_then_adopts_completable(engine):
+    """A handler returning an op chains the promise onto it."""
+    first, second = ManualOp(), ManualOp()
+    out = engine.wrap(first).then(lambda v: second)
+    first.trigger(Status(payload="a"))
+    assert not out.done()
+    second.trigger(Status(payload="b"))
+    assert out.result(timeout=5) == "b"
+
+
+def test_then_adopts_promise(engine):
+    inner = Promise.deferred(engine)
+    op = ManualOp()
+    out = engine.wrap(op).then(lambda v: inner)
+    op.trigger()
+    assert not out.done()
+    inner.resolve(123)
+    assert out.result(timeout=5) == 123
+
+
+def test_then_on_settled_promise_runs_immediately(engine):
+    op = ManualOp()
+    op.trigger(Status(payload=2))
+    p = engine.wrap(op)
+    p.result(timeout=5)
+    assert p.then(lambda v: v * 3).result(timeout=5) == 6
+
+
+def test_all_of_any_of(engine):
+    ops = [ManualOp() for _ in range(3)]
+    pall = Promise.all_of(engine, ops)
+    for i, op in enumerate(ops):
+        op.trigger(Status(payload=i))
+    assert pall.result(timeout=5) == [0, 1, 2]
+
+    ops2 = [ManualOp() for _ in range(3)]
+    pany = Promise.any_of(engine, ops2)
+    ops2[1].trigger(Status(payload="winner"))
+    assert pany.result(timeout=5) == "winner"
+
+
+# ------------------------------------------------------------ cancellation
+def test_cancel_propagates_to_op(engine):
+    op = ManualOp()
+    p = engine.wrap(op)
+    assert p.cancel() is True
+    assert op.state is OpState.CANCELLED
+    with pytest.raises(PromiseCancelled):
+        p.result(timeout=5)
+
+
+def test_cancel_through_then_chain(engine):
+    """Cancelling a chained child reaches the source operation."""
+    op = ManualOp()
+    child = engine.wrap(op).then(lambda v: v)
+    assert child.cancel() is True
+    assert op.state is OpState.CANCELLED
+    with pytest.raises(PromiseCancelled):
+        child.result(timeout=5)
+
+
+def test_deferred_resolve_reject(engine):
+    p = Promise.deferred(engine)
+    assert p.resolve("v") is True
+    assert p.resolve("again") is False           # settle-once
+    assert p.result(timeout=5) == "v"
+    q = Promise.deferred(engine)
+    q.reject(RuntimeError("nope"))
+    with pytest.raises(RuntimeError):
+        q.result(timeout=5)
+    d = Promise.deferred(engine)
+    assert d.cancel() is True                    # no op: direct rejection
+    with pytest.raises(PromiseCancelled):
+        d.result(timeout=5)
+
+
+# ---------------------------------------------------------- asyncio bridge
+def test_await_cross_thread_resolution(engine):
+    async def main():
+        op = ManualOp()
+        p = engine.wrap(op)
+        threading.Timer(
+            0.05, lambda: op.trigger(Status(payload="from-thread"))).start()
+        return await p
+
+    assert asyncio.run(main()) == "from-thread"
+
+
+def test_await_already_settled(engine):
+    async def main():
+        op = ManualOp()
+        op.trigger(Status(payload=7))
+        return await engine.wrap(op)
+
+    assert asyncio.run(main()) == 7
+
+
+def test_await_poll_mode_op_loop_driven(engine):
+    """A poll-mode op (TimerOp) awaited with NO external ticker: the
+    bridge keeps the engine progressing from the event loop."""
+    async def main():
+        t0 = time.monotonic()
+        await engine.wrap(TimerOp(0.05))
+        return time.monotonic() - t0
+
+    assert asyncio.run(main()) >= 0.05
+
+
+def test_await_rejection_raises(engine):
+    async def main():
+        op = ManualOp()
+        p = engine.wrap(op)
+        threading.Timer(0.02, op.cancel).start()
+        with pytest.raises(PromiseCancelled):
+            await p
+        return "ok"
+
+    assert asyncio.run(main()) == "ok"
+
+
+def test_await_gather_many(engine):
+    """Batch awaiting — the serving-style pattern the bench gates."""
+    async def main():
+        ops = [ManualOp() for _ in range(32)]
+        proms = [engine.wrap(op) for op in ops]
+
+        def fire():
+            for i, op in enumerate(ops):
+                op.trigger(Status(payload=i))
+
+        threading.Timer(0.02, fire).start()
+        return await asyncio.gather(*proms)
+
+    assert asyncio.run(main()) == list(range(32))
+
+
+def test_await_when_all_composite(engine):
+    async def main():
+        ops = [ManualOp(push=False) for _ in range(3)]
+        comb = when_all(ops)
+        for op in ops:
+            op.trigger()                         # poll flags only
+        return await engine.wrap(comb)
+
+    assert asyncio.run(main()) == [None, None, None]
+
+
+def test_settle_callback_isolation(engine):
+    """Regression (review): one broken settle consumer must not starve
+    the others (e.g. an awaiter whose event loop already closed)."""
+    op = ManualOp()
+    p = engine.wrap(op)
+    seen = []
+
+    def broken(state, value):
+        raise RuntimeError("consumer exploded")
+
+    p._on_settle(broken)
+    p._on_settle(lambda s, v: seen.append(v))
+    op.trigger(Status(payload="v"))              # must not raise
+    assert seen == ["v"]
+
+
+def test_shared_progress_driver_single_chain(engine):
+    """Regression (review): N concurrent awaits share one engine tick
+    chain instead of N redundant per-interval scans."""
+    async def main():
+        import asyncio
+        from repro.core import promise as pr
+        ops = [ManualOp(push=False) for _ in range(8)]
+        proms = [engine.wrap(op) for op in ops]
+
+        async def one(p):
+            return await p
+
+        tasks = [asyncio.ensure_future(one(p)) for p in proms]
+        await asyncio.sleep(0.01)                # let every __await__ run
+        drivers = getattr(pr._BRIDGE_TLS, "drivers", {})
+        assert len(drivers) == 1                 # one chain for the engine
+        (_loop, watch), = drivers.values()
+        assert len(watch) == 8
+        for op in ops:
+            op.trigger()                         # poll flags
+        await asyncio.gather(*tasks)
+        await asyncio.sleep(0.01)                # chain retires itself
+        assert id(engine) not in getattr(pr._BRIDGE_TLS, "drivers", {})
+        return True
+
+    import asyncio
+    assert asyncio.run(main())

@@ -208,3 +208,57 @@ def test_serve_single_token_requests_skip_slots(small_model):
     reqs = serve_requests(cfg, params, [Request(prompts[0], 1)],
                           max_batch=2, max_cache_len=16, timeout=300)
     assert reqs[0].tokens == base
+
+
+def test_submit_async_awaitable(small_model):
+    """The promise front-end over serving: submit_async returns an
+    awaitable that resolves with the token list at retirement, while the
+    decode loop runs on its own thread."""
+    import asyncio
+    cfg, params, prompts = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, max_cache_len=32,
+                      paged=False)
+    try:
+        async def main():
+            reqs = [Request(prompts[i], 3 + i) for i in range(2)]
+            proms = [eng.submit_async(r) for r in reqs]
+            eng.close_intake()
+            loop = threading.Thread(target=lambda: eng.run(timeout=300))
+            loop.start()
+            toks = await asyncio.gather(*proms)
+            loop.join()
+            return reqs, toks
+
+        reqs, toks = asyncio.run(main())
+        for i, (r, t) in enumerate(zip(reqs, toks)):
+            assert t == r.tokens
+            assert len(t) == 3 + i
+    finally:
+        eng.shutdown()
+
+
+def test_submit_async_cancel_rejects(small_model):
+    """promise.cancel() cancels the underlying request; the awaitable
+    rejects with PromiseCancelled."""
+    import asyncio
+    from repro.core import PromiseCancelled
+    cfg, params, prompts = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, max_cache_len=32,
+                      paged=False)
+    try:
+        async def main():
+            req = Request(prompts[0], 50)
+            prom = eng.submit_async(req)
+            prom.cancel()
+            eng.close_intake()
+            loop = threading.Thread(target=lambda: eng.run(timeout=300))
+            loop.start()
+            with pytest.raises(PromiseCancelled):
+                await prom
+            loop.join()
+            return req
+
+        req = asyncio.run(main())
+        assert req.req_state is RequestState.CANCELLED
+    finally:
+        eng.shutdown()

@@ -192,3 +192,52 @@ def test_offload_quota_dynamics(engine):
     for _ in range(3):
         m0.end_iteration({})
     assert m0.pick_target({1: 0.0}) == 1
+
+
+def test_heartbeat_sweep_error_surfaces_in_progress(engine):
+    """Regression (review): a raising on_failure callback must surface
+    from monitor.progress(), not silently kill the sweep chain."""
+    import pytest as _pytest
+    import time as _time
+    from repro.core import Transport
+    from repro.runtime.heartbeat import HeartbeatMonitor
+    tr = Transport(2, engine=engine)
+
+    def bad_on_failure(rank):
+        raise RuntimeError("elastic controller exploded")
+
+    mon = HeartbeatMonitor(tr, engine, rank=0, watched=[1],
+                           timeout_s=0.01, sweep_interval_s=0.01,
+                           on_failure=bad_on_failure)
+    _time.sleep(0.05)                  # rank 1 never beats -> stale
+    with _pytest.raises(RuntimeError, match="elastic controller"):
+        deadline = _time.monotonic() + 5.0
+        while _time.monotonic() < deadline:
+            mon.progress()
+            _time.sleep(0.005)
+    mon.stop()
+
+
+def test_checkpoint_commit_stage_error_surfaces(tmp_path, engine):
+    """Regression (review): an exception in the commit stage itself
+    (manifest write / rename) must surface from handle.wait(), not be
+    swallowed into the promise chain."""
+    import pytest as _pytest
+    from repro.checkpoint.async_ckpt import AsyncCheckpointer
+    ckpt = AsyncCheckpointer(str(tmp_path), engine)
+    state = {"w": jnp.ones((2,))}
+    boom = RuntimeError("disk full")
+    orig_rename = os.rename
+
+    def bad_rename(src, dst):
+        raise boom
+
+    os.rename = bad_rename
+    try:
+        h = ckpt.save_async(5, state)
+        with _pytest.raises(RuntimeError, match="disk full"):
+            h.wait(timeout=30)
+    finally:
+        os.rename = orig_rename
+        ckpt.close()
+    assert ckpt.latest_step() is None      # nothing committed
