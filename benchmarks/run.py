@@ -26,8 +26,12 @@ block). Mapping to the paper (DESIGN.md §7):
                    bursty multi-request workload — tokens/s and p99 TTFT.
                    ``serve.paged.*`` adds dense vs paged-pool at equal cache
                    memory; ``serve.spec.*`` adds speculative (draft/verify)
-                   vs plain paged decode on a repetition-friendly trace.
-                   All emitted machine-readable to BENCH_serve.json.
+                   vs plain paged decode on a repetition-friendly trace;
+                   ``serve.stream.*`` adds the streaming session API
+                   (per-token continuation delivery: TTFT speedup over
+                   retirement delivery, inter-token p99, tokens/s
+                   overhead). All emitted machine-readable to
+                   BENCH_serve.json.
 
 ``--quick`` runs a CI-smoke subset (notification + scheduler + loc +
 serve) at reduced sizes; ``--only BLOCK`` runs a single block by name.
@@ -854,6 +858,160 @@ def bench_serve_spec() -> None:
     print("# appended spec block to BENCH_serve.json", flush=True)
 
 
+# ===================== beyond paper: streaming session API (per-token)
+def bench_serve_stream() -> None:
+    """Streaming (per-token continuation delivery through ``TokenStream``)
+    vs retirement delivery (``submit()``: tokens observable only when the
+    request finishes) on the same engine geometry and workload.
+
+    The streaming claims, measured as ratios so CI can gate them
+    hardware-portably:
+
+    * ``ttft_speedup`` — mean time to the first *observable* token:
+      retirement-mode first-observable (= request latency) over streaming
+      TTFT. First tokens must arrive well before retirement.
+    * ``tokens_per_s_ratio`` — streaming tokens/s over retirement
+      tokens/s: the inter-token overhead of per-token delivery. On CPU
+      this reads ~0.8-1.0 — each token wakes a consumer thread, and the
+      GIL handoff steals cycles from the Python-heavy dispatch path —
+      while the decode loop itself never blocks on a consumer (the
+      failure mode the gate exists for, which lands at 0.1-0.3x).
+
+    Inter-token p99 gap is recorded (ms, informational). Appends a
+    ``stream`` block to BENCH_serve.json.
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve import GenerationConfig, Request, ServeClient, \
+        ServeEngine
+    from repro.serve.request import _percentile
+
+    cfg = get_config("paper_demo", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    # one request per slot: no admission queueing, so the measured TTFT
+    # gap is purely delivery timing (first step completion vs retirement)
+    # — the serve.* block already measures batching under oversubscription
+    n_requests = n_slots = 4
+    prompt_len, length = 8, 32
+    max_seq = prompt_len + length
+    repeats = 3 if QUICK else 5
+    prompts = jax.random.randint(jax.random.PRNGKey(5),
+                                 (n_requests, prompt_len), 0, cfg.vocab_size)
+    useful_tokens = n_requests * length
+
+    def make_engine():
+        eng = ServeEngine(cfg, params, max_batch=n_slots,
+                          max_cache_len=max_seq)
+        warm = [Request(prompts[0], 2), Request(prompts[1], 2)]
+        for r in warm:
+            eng.submit(r)
+        eng._bench_done = len(warm)
+        eng.run(until=lambda: len(eng.retired) == eng._bench_done,
+                timeout=200)
+        return eng
+
+    def batch_trial(eng):
+        """Retirement delivery: tokens observable at finish only."""
+        reqs = [Request(prompts[i], GenerationConfig(max_tokens=length))
+                for i in range(n_requests)]
+        t0 = time.monotonic()
+        for r in reqs:
+            r.arrival_time = time.monotonic()
+            eng.submit(r)
+        eng._bench_done += n_requests
+        eng.run(until=lambda: len(eng.retired) == eng._bench_done,
+                timeout=300)
+        first_observable = [r.finish_time - r.arrival_time for r in reqs]
+        return max(r.finish_time for r in reqs) - t0, first_observable
+
+    def stream_trial(client):
+        """Per-token delivery: consumers time every token's arrival."""
+        session = client.session(max_tokens=length)
+        times = [[] for _ in range(n_requests)]
+        streams = [None] * n_requests
+
+        def consume(i):
+            for _ in streams[i]:
+                times[i].append(time.monotonic())
+
+        t0 = time.monotonic()
+        threads = []
+        for i in range(n_requests):
+            streams[i] = session.generate(prompts[i])
+            threads.append(threading.Thread(target=consume, args=(i,)))
+            threads[-1].start()
+        for t in threads:
+            t.join()
+        makespan = max(ts[-1] for ts in times) - t0
+        ttfts = [ts[0] - s.request.arrival_time
+                 for ts, s in zip(times, streams)]
+        gaps = [b - a for ts in times for a, b in zip(ts, ts[1:])]
+        return makespan, ttfts, gaps
+
+    # interleave the two variants (alternating order per repeat) so
+    # machine-load drift hits both alike; report each variant's best
+    batch_eng = make_engine()
+    stream_client = ServeClient(engine=make_engine())
+    batch_best = stream_best = None
+    batch_first, stream_ttfts, stream_gaps = [], [], []
+    for rep in range(repeats):
+        if rep % 2 == 0:
+            b = batch_trial(batch_eng)
+            s = stream_trial(stream_client)
+        else:
+            s = stream_trial(stream_client)
+            b = batch_trial(batch_eng)
+        if batch_best is None or b[0] < batch_best:
+            batch_best, batch_first = b
+        if stream_best is None or s[0] < stream_best:
+            stream_best, stream_ttfts, stream_gaps = s
+    batch_eng.shutdown()
+    stream_client.close()
+
+    batch_tps = useful_tokens / batch_best
+    stream_tps = useful_tokens / stream_best
+    ttft_stream = sum(stream_ttfts) / len(stream_ttfts)
+    ttft_batch = sum(batch_first) / len(batch_first)
+    inter_p99 = _percentile(sorted(stream_gaps), 0.99)
+    ttft_speedup = ttft_batch / ttft_stream
+    tps_ratio = stream_tps / batch_tps
+
+    emit("serve.stream.stream_delivery", stream_best / useful_tokens * 1e6,
+         f"{stream_tps:.0f}_tok_per_s_ttft_{ttft_stream * 1e3:.0f}ms")
+    emit("serve.stream.retirement_baseline",
+         batch_best / useful_tokens * 1e6,
+         f"{batch_tps:.0f}_tok_per_s_first_observable_"
+         f"{ttft_batch * 1e3:.0f}ms")
+    emit("serve.stream.ttft_speedup", 0.0, f"{ttft_speedup:.3f}x")
+    emit("serve.stream.inter_token_p99", inter_p99 * 1e6, "per_gap")
+    emit("serve.stream.tokens_per_s_ratio", 0.0,
+         f"{tps_ratio:.3f}x_vs_retirement")
+
+    try:
+        with open("BENCH_serve.json") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        doc = {}
+    doc["stream"] = {
+        "workload": {"n_requests": n_requests, "n_slots": n_slots,
+                     "prompt_len": prompt_len, "length": length,
+                     "repeats_best_of": repeats},
+        "streaming": {"tokens_per_s": stream_tps,
+                      "makespan_s": stream_best,
+                      "ttft_mean_s": ttft_stream,
+                      "inter_token_p99_s": inter_p99},
+        "retirement": {"tokens_per_s": batch_tps,
+                       "makespan_s": batch_best,
+                       "first_observable_mean_s": ttft_batch},
+        "ttft_speedup": ttft_speedup,
+        "tokens_per_s_ratio": tps_ratio,
+    }
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(doc, f, indent=2)
+    print("# appended stream block to BENCH_serve.json", flush=True)
+
+
 # ========================= beyond paper: API layer (flags + await bridge)
 def bench_api() -> None:
     """Per-registration flag overhead and awaitable-bridge notification
@@ -993,10 +1151,10 @@ def bench_api() -> None:
 ALL_BENCHES = (bench_notification, bench_scheduler, bench_zones,
                bench_dataflow, bench_offload, bench_loc,
                bench_train_overlap, bench_serve, bench_serve_paged,
-               bench_serve_spec, bench_api)
+               bench_serve_spec, bench_serve_stream, bench_api)
 QUICK_BENCHES = (bench_notification, bench_scheduler, bench_loc,
                  bench_serve, bench_serve_paged, bench_serve_spec,
-                 bench_api)
+                 bench_serve_stream, bench_api)
 
 
 def main() -> None:

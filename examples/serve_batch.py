@@ -1,12 +1,13 @@
 """Continuous-batching serving example (continuation-driven).
 
-Serves a reduced-config model (CPU) through ``repro.serve.ServeEngine``:
-requests are admitted into decode slots as they arrive (admission queues on
-a ``poll_only`` continuation request, so bursts never preempt the decode
-loop), each vmapped decode step advances every occupied slot by one token,
-and per-step ``ArrayOp`` continuations retire finished sequences — freeing
-their slots for waiting requests immediately instead of padding along to
-the longest member of a static batch.
+Serves a reduced-config model (CPU) through the streaming session API
+(``repro.serve.ServeClient``): requests are admitted into decode slots as
+they arrive (admission queues on a ``poll_only`` continuation request, so
+bursts never preempt the decode loop), each vmapped decode step advances
+every occupied slot by one token, and per-step ``ArrayOp`` continuations
+deliver tokens into each request's ``TokenStream`` and retire finished
+sequences — freeing their slots for waiting requests immediately instead
+of padding along to the longest member of a static batch.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py [--arch h2o_danube3_4b]
 """
@@ -17,7 +18,7 @@ import jax
 
 from repro.configs import get_config
 from repro.models import lm
-from repro.serve import Request, ServeEngine
+from repro.serve import ServeClient
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -40,23 +41,23 @@ if __name__ == "__main__":
     # heterogeneous output lengths — where continuous batching shines
     lengths = [min(args.new_tokens, 4 + 3 * i) for i in range(args.requests)]
 
-    serve = ServeEngine(cfg, params, max_batch=args.slots,
-                        max_cache_len=args.prompt_len + args.new_tokens)
-    reqs = [Request(prompts[i], lengths[i]) for i in range(args.requests)]
-    t0 = time.time()
-    for r in reqs:
-        serve.submit(r)
-    serve.close_intake()
-    serve.run(timeout=600)
-    dt = time.time() - t0
-    print(f"arch={cfg.name} requests={args.requests} slots={args.slots} "
-          f"prompt={args.prompt_len}")
-    for r in reqs:
-        print(f"  req {r.req_id}: ttft={r.ttft * 1e3:7.1f}ms "
-              f"n={len(r.tokens):2d} tokens={r.tokens}")
-    m = serve.metrics()
-    n_tok = m["total_tokens"]
-    print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s incl. "
-          f"compile); steps={m['steps']} slot_steps={m['slot_steps']} "
-          f"padded={m['padded_steps']}")
-    serve.shutdown()
+    with ServeClient(cfg, params, max_batch=args.slots,
+                     max_cache_len=args.prompt_len + args.new_tokens
+                     ) as client:
+        session = client.session()
+        t0 = time.time()
+        streams = [session.generate(prompts[i], max_tokens=lengths[i])
+                   for i in range(args.requests)]
+        tokens = [s.result(timeout=600) for s in streams]
+        dt = time.time() - t0
+        print(f"arch={cfg.name} requests={args.requests} slots={args.slots} "
+              f"prompt={args.prompt_len}")
+        for s, toks in zip(streams, tokens):
+            r = s.request
+            print(f"  req {r.req_id}: ttft={r.ttft * 1e3:7.1f}ms "
+                  f"n={len(toks):2d} tokens={toks}")
+        m = client.metrics()
+        n_tok = m["total_tokens"]
+        print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s incl. "
+              f"compile); steps={m['steps']} slot_steps={m['slot_steps']} "
+              f"padded={m['padded_steps']}")

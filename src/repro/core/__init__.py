@@ -27,7 +27,7 @@ from repro.core.flags import ContinueFlags, ResolvedPolicy, make_flags
 from repro.core.info import (THREAD_ANY, THREAD_APPLICATION, ContinueInfo,
                              make_info)
 from repro.core.progress import Progress
-from repro.core.promise import Promise, PromiseCancelled
+from repro.core.promise import Promise, PromiseCancelled, Signal
 from repro.core.scheduler import (AffinityScheduler, FifoScheduler, Scheduler,
                                   make_scheduler)
 from repro.core.status import STATUS_IGNORE, OpState, Status
@@ -42,7 +42,8 @@ __all__ = [
     "reset_default_engine", "THREAD_ANY", "THREAD_APPLICATION",
     "ContinueInfo", "make_info", "ContinueFlags", "ResolvedPolicy",
     "make_flags", "STATUS_IGNORE", "OpState", "Status",
-    "Progress", "Promise", "PromiseCancelled", "Scheduler", "FifoScheduler",
+    "Progress", "Promise", "PromiseCancelled", "Signal", "Scheduler",
+    "FifoScheduler",
     "AffinityScheduler", "make_scheduler", "TestsomeManager", "ANY_SOURCE",
     "ANY_TAG", "RecvOp", "SendOp", "Transport",
 ]

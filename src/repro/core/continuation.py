@@ -65,6 +65,46 @@ class ContinuationState(enum.Enum):
     DONE = "done"
 
 
+class ClassDeque:
+    """Ready-queue primitive shared by every continuation queue: two FIFO
+    deques split by priority class. ``priority > 0`` registrations drain
+    first but stay FIFO *within* their class — priority jumping must
+    never reorder continuations from the same source (e.g. a serve
+    request's consecutive step completions), which a naive
+    ``appendleft`` would turn LIFO. Not thread-safe: callers hold their
+    own lock.
+    """
+
+    __slots__ = ("hi", "lo")
+
+    def __init__(self) -> None:
+        self.hi: collections.deque["Continuation"] = collections.deque()
+        self.lo: collections.deque["Continuation"] = collections.deque()
+
+    def _class(self, cont: "Continuation") -> collections.deque:
+        return self.hi if cont.policy.priority > 0 else self.lo
+
+    def push(self, cont: "Continuation") -> None:
+        self._class(cont).append(cont)
+
+    def push_front(self, cont: "Continuation") -> None:
+        """Requeue at the head of the continuation's class."""
+        self._class(cont).appendleft(cont)
+
+    def pop(self) -> Optional["Continuation"]:
+        if self.hi:
+            return self.hi.popleft()
+        if self.lo:
+            return self.lo.popleft()
+        return None
+
+    def __len__(self) -> int:
+        return len(self.hi) + len(self.lo)
+
+    def __bool__(self) -> bool:
+        return bool(self.hi) or bool(self.lo)
+
+
 class Continuation:
     """One registered callback, possibly spanning several operations."""
 
@@ -138,7 +178,7 @@ class ContinuationRequest(Completable):
         self._idle_cond = threading.Condition(self._lock)
         # ready-but-not-executed continuations for poll_only CRs; non-poll_only
         # CRs route ready continuations to the engine's shared queue.
-        self._ready_q: collections.deque[Continuation] = collections.deque()
+        self._ready_q = ClassDeque()
         self._errors: list[BaseException] = []
         self._raise_q: list[BaseException] = []   # subset with on_error=raise
         self._released = False                    # free() fully drained
@@ -166,7 +206,7 @@ class ContinuationRequest(Completable):
         may execute inline when the continuation's policy allows)."""
         if cont.policy.poll_only:
             with self._lock:
-                self._ready_q.append(cont)
+                self._ready_q.push(cont)
         else:
             self.engine.scheduler.submit(cont)
 

@@ -40,6 +40,11 @@ Fields (MPIX_CONT_* analogues noted):
   raised from the CR's next test/wait), ``"collect"`` (stored on
   ``cr.errors`` only), or a callable ``fn(exc)`` invoked with the
   exception (never stored).
+* ``priority``          — scheduler hint: a registration with
+  ``priority > 0`` is pushed to the *front* of the ready queue(s), so its
+  callback drains ahead of already-queued normal-priority work (the serve
+  front-end maps per-request QoS priority onto this; there is no CR-level
+  counterpart — the default is 0).
 
 ``make_flags`` accepts a ``ContinueFlags``, a mapping (new-style field
 names or the deprecated MPI-style ``mpi_continue_*`` string keys), and/or
@@ -67,8 +72,12 @@ class ContinueFlags:
     thread: Optional[str] = None
     volatile_statuses: Optional[bool] = None
     on_error: Optional[OnError] = None
+    priority: Optional[int] = None
 
     def __post_init__(self) -> None:
+        if self.priority is not None and not isinstance(self.priority, int):
+            raise ValueError(f"priority must be an int, "
+                             f"got {self.priority!r}")
         if self.thread not in (None, THREAD_APPLICATION, THREAD_ANY):
             raise ValueError(f"thread must be 'application' or 'any', "
                              f"got {self.thread!r}")
@@ -99,6 +108,7 @@ class ResolvedPolicy:
     thread: str
     volatile_statuses: bool
     on_error: OnError
+    priority: int = 0
 
 
 #: deprecated MPI-style string keys (mirrors ``core.info._KEYMAP``); kept
@@ -110,6 +120,7 @@ _FLAG_KEYMAP = {
     "mpi_continue_poll_only": "poll_only",
     "mpi_continue_thread": "thread",
     "mpi_continue_volatile_statuses": "volatile_statuses",
+    "mpi_continue_priority": "priority",
     "on_error": "on_error",
 }
 
@@ -156,14 +167,15 @@ def merge_flags(base: Optional[ContinueFlags],
 def resolve(info: ContinueInfo,
             flags: Optional[ContinueFlags]) -> ResolvedPolicy:
     """CR info defaults, overridden by any non-``None`` per-registration
-    flag. ``immediate``/``defer_complete``/``volatile_statuses`` have no
-    CR-level counterpart — their default is ``False``."""
+    flag. ``immediate``/``defer_complete``/``volatile_statuses`` (default
+    ``False``) and ``priority`` (default 0) have no CR-level
+    counterpart."""
     if flags is None:
         return ResolvedPolicy(
             enqueue_complete=info.enqueue_complete, immediate=False,
             defer_complete=False, poll_only=info.poll_only,
             thread=info.thread, volatile_statuses=False,
-            on_error=info.on_error)
+            on_error=info.on_error, priority=0)
 
     def pick(override, default):
         return default if override is None else override
@@ -175,4 +187,5 @@ def resolve(info: ContinueInfo,
         poll_only=pick(flags.poll_only, info.poll_only),
         thread=pick(flags.thread, info.thread),
         volatile_statuses=pick(flags.volatile_statuses, False),
-        on_error=pick(flags.on_error, info.on_error))
+        on_error=pick(flags.on_error, info.on_error),
+        priority=pick(flags.priority, 0))

@@ -344,6 +344,63 @@ def _settled_iter(value):
     yield  # pragma: no cover — generator marker
 
 
+class Signal:
+    """Multi-shot settle support: a re-armable completion signal.
+
+    A ``Promise`` settles exactly once — right for one operation, wrong
+    for a *stream* of completions (per-token delivery, repeated sweeps).
+    ``Signal`` chains one-shot promises into a multi-shot gate:
+
+    * ``wait()`` returns the **current generation's** promise. Await it
+      (loop-safe, same asyncio bridge as any promise) or chain on it.
+    * ``set(value)`` fulfils the current generation and atomically arms a
+      fresh one, so the next ``wait()`` observes only *later* sets.
+
+    The lost-wakeup-free consumer pattern is **arm → check → await**::
+
+        while True:
+            p = signal.wait()          # arm FIRST
+            if <state check finds work or a terminal condition>:
+                ...consume/return...   # p is simply dropped
+                continue
+            await p                    # fulfilled by any set() after wait()
+
+    Any ``set()`` that raced between the arm and the check fulfilled the
+    armed promise, so the await cannot sleep through it. A ``set()``
+    with **no armed waiter is a cheap no-op** (no promise churn on the
+    producer's hot path — a decode loop signalling per token pays only a
+    flag check while nobody streams asynchronously); consequently the
+    signal is a *wakeup* gate, not a value channel — consumers must read
+    the actual state in the check step, exactly as the pattern above
+    does. Producers call ``set()`` *after* publishing state; ``set()``
+    never blocks, so a completion continuation can signal safely.
+    """
+
+    def __init__(self, engine=None) -> None:
+        self._engine = engine
+        self._lock = threading.Lock()
+        self._current = Promise(engine, None)
+        self._armed = False
+        self.fired = 0        # total set() calls (informational)
+
+    def wait(self) -> Promise:
+        """Arm: the promise fulfilled by the next ``set()``."""
+        with self._lock:
+            self._armed = True
+            return self._current
+
+    def set(self, value: Any = None) -> None:
+        """Fulfil the armed generation (if any) and re-arm a fresh one."""
+        with self._lock:
+            self.fired += 1
+            if not self._armed:
+                return                 # nobody waiting: skip the churn
+            self._armed = False
+            settled, self._current = self._current, Promise(self._engine,
+                                                            None)
+        settled._fulfill(value)
+
+
 def wrap(engine, op: Completable, cr=None) -> Promise:
     """Module-level alias of ``engine.wrap``."""
     return Promise.of(engine, op, cr=cr)

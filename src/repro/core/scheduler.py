@@ -22,26 +22,30 @@ and the thread-eligibility policy:
 
 Two implementations:
 
-* ``FifoScheduler``     — one shared deque + one lock; global FIFO order.
+* ``FifoScheduler``     — one shared queue + one lock; global FIFO order.
   Simple and fair, but every ``submit``/``drain`` on the hot path takes the
   same lock from every thread.
-* ``AffinityScheduler`` — per-thread local deques plus a shared overflow
-  deque with work stealing. A completion discovered on thread *T* lands on
+* ``AffinityScheduler`` — per-thread local queues plus a shared overflow
+  queue with work stealing. A completion discovered on thread *T* lands on
   *T*'s local queue (usually drained inline by *T* a few instructions
   later) without touching any shared lock; ineligible or stolen work
-  migrates through the shared deque, so nothing strands on a thread that
+  migrates through the shared queue, so nothing strands on a thread that
   never re-enters the engine.
+
+Every queue is a ``core.continuation.ClassDeque``: registrations with the
+per-registration ``priority`` flag > 0 drain ahead of normal work but
+stay FIFO within their priority class.
 
 Select per engine: ``Engine(scheduler="fifo"|"affinity")`` or pass a
 ``Scheduler`` instance.
 """
 from __future__ import annotations
 
-import collections
 import threading
 from typing import Dict, List, Optional, Sequence
 
-from repro.core.continuation import Continuation, ContinuationRequest
+from repro.core.continuation import (ClassDeque, Continuation,
+                                     ContinuationRequest)
 from repro.core.info import THREAD_ANY
 
 _TLS = threading.local()
@@ -191,37 +195,38 @@ class Scheduler:
         ran = 0
         while limit < 0 or ran < limit:
             with cr._lock:
-                if not cr._ready_q:
-                    break
-                cont = cr._ready_q.popleft()
+                cont = cr._ready_q.pop()
+            if cont is None:
+                break
             self.run_one(cont)
             ran += 1
         return ran
 
 
 class FifoScheduler(Scheduler):
-    """The reference policy: one shared deque, one lock, global FIFO."""
+    """The reference policy: one shared lock, one ``ClassDeque`` —
+    global FIFO within each priority class (priority>0 drains first; see
+    ``ClassDeque`` for why jumping must not reorder a class)."""
 
     name = "fifo"
 
     def __init__(self, *, inline_limit: int = 16) -> None:
         super().__init__(inline_limit=inline_limit)
-        self._ready: collections.deque[Continuation] = collections.deque()
+        self._ready = ClassDeque()
         self._lock = threading.Lock()
 
     def _push(self, cont: Continuation) -> None:
         with self._lock:
-            self._ready.append(cont)
+            self._ready.push(cont)
 
     def _pop(self) -> Optional[Continuation]:
         with self._lock:
-            if not self._ready:
-                return None
-            return self._ready.popleft()
+            return self._ready.pop()
 
     def _requeue(self, conts: Sequence[Continuation]) -> None:
         with self._lock:
-            self._ready.extendleft(reversed(conts))
+            for cont in reversed(conts):
+                self._ready.push_front(cont)
 
     @property
     def pending(self) -> int:
@@ -234,7 +239,7 @@ class _LocalQueue:
 
     def __init__(self) -> None:
         self.lock = threading.Lock()
-        self.q: collections.deque[Continuation] = collections.deque()
+        self.q = ClassDeque()
 
 
 class AffinityScheduler(Scheduler):
@@ -255,7 +260,7 @@ class AffinityScheduler(Scheduler):
         super().__init__(inline_limit=inline_limit)
         self._locals: Dict[int, _LocalQueue] = {}
         self._locals_lock = threading.Lock()
-        self._shared: collections.deque[Continuation] = collections.deque()
+        self._shared = ClassDeque()      # overflow (class-FIFO, like all)
         self._shared_lock = threading.Lock()
         self.stats["local_pushes"] = 0
         self.stats["shared_pushes"] = 0
@@ -274,12 +279,12 @@ class AffinityScheduler(Scheduler):
         # would only ever be drained under the thread=any policy.
         if threading.get_ident() in self._internal_threads:
             with self._shared_lock:
-                self._shared.append(cont)
+                self._shared.push(cont)
             self.stats["shared_pushes"] += 1
             return
         lq = self._my_queue()
         with lq.lock:
-            lq.q.append(cont)
+            lq.q.push(cont)
         self.stats["local_pushes"] += 1
 
     def _pop(self) -> Optional[Continuation]:
@@ -287,12 +292,14 @@ class AffinityScheduler(Scheduler):
         lq = self._locals.get(threading.get_ident())
         if lq is not None:
             with lq.lock:
-                if lq.q:
-                    return lq.q.popleft()
-        # 2. shared overflow deque
+                cont = lq.q.pop()
+            if cont is not None:
+                return cont
+        # 2. shared overflow
         with self._shared_lock:
-            if self._shared:
-                return self._shared.popleft()
+            cont = self._shared.pop()
+        if cont is not None:
+            return cont
         # 3. steal from another thread's local queue
         with self._locals_lock:
             victims = list(self._locals.values())
@@ -300,16 +307,18 @@ class AffinityScheduler(Scheduler):
             if victim is lq:
                 continue
             with victim.lock:
-                if victim.q:
-                    self.stats["steals"] += 1
-                    return victim.q.popleft()
+                cont = victim.q.pop()
+            if cont is not None:
+                self.stats["steals"] += 1
+                return cont
         return None
 
     def _requeue(self, conts: Sequence[Continuation]) -> None:
         # Requeued work was ineligible on this thread — publish it where any
         # other thread will find it first.
         with self._shared_lock:
-            self._shared.extendleft(reversed(conts))
+            for cont in reversed(conts):
+                self._shared.push_front(cont)
 
     @property
     def pending(self) -> int:

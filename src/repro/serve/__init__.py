@@ -2,13 +2,20 @@
 
 Layers:
 
-* ``serve.steps``   — jittable prefill/decode step factories and the
-  synchronous ``greedy_generate`` baseline (application-space completion
-  handling — the pattern the paper argues against).
+* ``serve.steps``   — jittable prefill/decode step factories (with fused
+  per-step token surfacing) and the synchronous ``greedy_generate``
+  baseline (application-space completion handling — the pattern the
+  paper argues against).
+* ``serve.config``  — ``GenerationConfig``: the structured, validated bag
+  of per-request knobs (budget, speculation, stop sequences, deadline,
+  priority, stream buffering) resolved once at admission.
 * ``serve.request`` — request lifecycle; each ``Request`` is a
-  ``Completable`` so callers attach continuations to completions.
+  ``Completable`` so callers attach continuations to completions, and
+  per-token *delivery* runs in the engine's step-completion
+  continuations (stop matching, stream publication).
 * ``serve.batcher`` — thread-safe admission on a ``poll_only +
-  enqueue_complete`` CR; bursts queue without preempting the decode loop.
+  enqueue_complete`` CR; bursts queue without preempting the decode
+  loop; priority-ordered pops, past-deadline refusal.
 * ``serve.drafter`` — pluggable ``Drafter`` protocol for self-speculative
   decoding (default: n-gram prompt lookup); drafts are verified by one
   multi-token paged decode step, so emitted tokens always match greedy.
@@ -17,16 +24,23 @@ Layers:
   are mapped read-only; the mutable tail page is always private).
 * ``serve.engine``  — the continuous-batching decode loop where each
   step's ``jax.Array`` outputs are ``ArrayOp``s whose continuations
-  re-enqueue or retire sequences, overlapping prefill with in-flight
-  decode. Paged by default where the model family supports it.
+  deliver tokens, re-enqueue or retire sequences (budget, stop sequence,
+  or deadline), and overlap prefill with in-flight decode. Paged by
+  default where the model family supports it.
+* ``serve.api``     — the streaming session front-end:
+  ``ServeClient`` / ``Session`` / ``TokenStream`` (sync + asyncio
+  per-token iteration driven by the same continuations; no polling
+  thread).
 """
+from repro.serve.api import ServeClient, Session, TokenStream
 from repro.serve.batcher import Batcher
+from repro.serve.config import DeadlineExceeded, GenerationConfig
 from repro.serve.drafter import Drafter, NgramDrafter, RepeatDrafter
 from repro.serve.engine import ServeEngine, serve_requests
 from repro.serve.kv_cache import PagePool, paged_supported, pages_for
 from repro.serve.request import Request, RequestState, summarize
-from repro.serve.steps import (greedy_generate, make_decode_step,
-                               make_paged_decode_step,
+from repro.serve.steps import (greedy_generate, make_batched_decode_step,
+                               make_decode_step, make_paged_decode_step,
                                make_paged_suffix_step,
                                make_paged_verify_step, make_prefill_scatter,
                                make_prefill_step)
@@ -34,7 +48,9 @@ from repro.serve.steps import (greedy_generate, make_decode_step,
 __all__ = [
     "Batcher", "ServeEngine", "serve_requests", "Request", "RequestState",
     "summarize", "greedy_generate", "make_decode_step", "make_prefill_step",
-    "PagePool", "paged_supported", "pages_for", "make_paged_decode_step",
-    "make_paged_suffix_step", "make_paged_verify_step",
-    "make_prefill_scatter", "Drafter", "NgramDrafter", "RepeatDrafter",
+    "make_batched_decode_step", "PagePool", "paged_supported", "pages_for",
+    "make_paged_decode_step", "make_paged_suffix_step",
+    "make_paged_verify_step", "make_prefill_scatter", "Drafter",
+    "NgramDrafter", "RepeatDrafter", "GenerationConfig", "DeadlineExceeded",
+    "ServeClient", "Session", "TokenStream",
 ]

@@ -15,12 +15,18 @@ usage):
 
 ``admit(n)`` is the decode loop's entry point: one ``cr.test()`` drains
 the queued admission callbacks (cheap appends), then up to ``n`` requests
-are handed out in arrival order.
+are handed out in **QoS order**: strictly by ``config.priority`` (higher
+first), arrival order within a priority class. Requests whose
+``config.deadline_s`` already passed while queued are *refused* — expired
+with ``DeadlineExceeded`` instead of wasting prefill compute — and
+capacity-deferred requests requeue at the head of their priority class.
 """
 from __future__ import annotations
 
-import collections
+import heapq
+import itertools
 import threading
+import time
 from typing import List, Optional
 
 from repro.core.completable import Completable
@@ -46,9 +52,14 @@ class Batcher:
         # individual registrations could override via flags=, but intake
         # is deliberately uniform
         self.cr = engine.continue_init(poll_only=True, enqueue_complete=True)
-        # only mutated by admission callbacks, i.e. inside cr.test() on the
-        # decode-loop thread
-        self._pending: collections.deque[Request] = collections.deque()
+        # priority heap: (-priority, seq, Request). seq is a monotone
+        # arrival counter, so equal-priority requests pop in arrival
+        # order; requeued requests get a *decreasing* seq and land at the
+        # head of their priority class. Only mutated by admission
+        # callbacks / admit / requeue, i.e. on the decode-loop thread.
+        self._pending: List[tuple] = []
+        self._arrival_seq = itertools.count()
+        self._head_seq = itertools.count(-1, -1)
         # one mutex makes the closed-check and the CR registration atomic
         # against close(): without it a submission racing close() could pass
         # the check, then register on the CR of a closed batcher and sit
@@ -56,7 +67,8 @@ class Batcher:
         self._intake_lock = threading.Lock()
         self._closed = False
         self.stats = {"submitted": 0, "admitted": 0, "dropped_cancelled": 0,
-                      "refused_closed": 0, "submitted_speculative": 0}
+                      "refused_closed": 0, "submitted_speculative": 0,
+                      "expired_queued": 0}
 
     # ---------------------------------------------------------- client side
     def submit(self, request: Request) -> Request:
@@ -91,19 +103,28 @@ class Batcher:
 
     # ----------------------------------------------------------- loop side
     def _on_submit(self, statuses, request: Request) -> None:
-        self._pending.append(request)
+        heapq.heappush(self._pending,
+                       (-request.priority, next(self._arrival_seq), request))
 
     def admit(self, max_n: int) -> List[Request]:
-        """Drain queued submissions and hand out up to ``max_n`` requests.
+        """Drain queued submissions and hand out up to ``max_n`` requests
+        in priority order, refusing past-deadline work.
 
         Must be called from the decode loop only (single-tester CR rule).
         """
         self.cr.test()
+        now = time.monotonic()
         out: List[Request] = []
         while self._pending and len(out) < max_n:
-            req = self._pending.popleft()
+            _, _, req = heapq.heappop(self._pending)
             if req.req_state is RequestState.CANCELLED:
                 self.stats["dropped_cancelled"] += 1
+                continue
+            if req.past_deadline(now):
+                # refuse: the deadline passed while the request queued —
+                # expire it here instead of spending prefill on it
+                req.expire()
+                self.stats["expired_queued"] += 1
                 continue
             req.on_admitted()
             out.append(req)
@@ -111,16 +132,18 @@ class Batcher:
         return out
 
     def requeue(self, request: Request) -> None:
-        """Return an admitted-but-unplaceable request to the head of the
-        queue (loop thread only — the paged engine defers admission when
-        the page pool can't cover the request's worst-case footprint)."""
+        """Return an admitted-but-unplaceable request to the head of its
+        priority class (loop thread only — the paged engine defers
+        admission when the page pool can't cover the request's worst-case
+        footprint)."""
         request.on_requeued()
-        self._pending.appendleft(request)
+        heapq.heappush(self._pending,
+                       (-request.priority, next(self._head_seq), request))
         self.stats["admitted"] -= 1
 
     @property
     def queued(self) -> int:
-        """Submissions already transferred to the pending list (does not
+        """Submissions already transferred to the pending heap (does not
         count ones still sitting on the CR until the next admit())."""
         return len(self._pending)
 

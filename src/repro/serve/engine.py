@@ -21,6 +21,15 @@ cache and position:
 * **retirement** — a finished ``Request`` is itself a ``Completable``:
   its continuation fires for whoever attached one, and ``request.wait()``
   unblocks the submitting client.
+* **per-token delivery** — the same step-completion continuations
+  *deliver* each newly accepted token to the request on the host
+  (``Request.deliver``): attached ``TokenStream``s (``serve.api``) wake
+  per token with no polling thread, stop sequences match as tokens land,
+  and deadline-expired slots are retired by the very continuation that
+  releases their pages. QoS: admission pops strictly by
+  ``GenerationConfig.priority`` (the ``Batcher`` heap) and steps carrying
+  priority work jump the scheduler's ready queue via the
+  per-registration ``priority`` flag.
 * **speculation** (``speculate=K``, paged mode) — each iteration becomes
   a draft/verify pair: a host-side ``Drafter`` (n-gram prompt lookup by
   default, pluggable) guesses K tokens per slot, and ONE multi-token
@@ -69,14 +78,32 @@ from repro.serve.batcher import Batcher
 from repro.serve.drafter import Drafter, NgramDrafter
 from repro.serve.kv_cache import PagePool, paged_supported, pages_for
 from repro.serve.request import Request, RequestState, summarize
-from repro.serve.steps import (make_decode_step, make_paged_decode_step,
-                               make_paged_suffix_step, make_paged_verify_step,
-                               make_prefill_scatter, make_prefill_step)
+from repro.serve.steps import (make_batched_decode_step,
+                               make_paged_decode_step, make_paged_suffix_step,
+                               make_paged_verify_step, make_prefill_scatter,
+                               make_prefill_step)
 
 # every step/prefill/verify registration: never take the immediate-
 # completion fast path, so bookkeeping always runs through the
 # continuation machinery even when the device raced ahead
 _STEP_FLAGS = ContinueFlags(enqueue_complete=True)
+# steps carrying priority>0 requests additionally jump the scheduler's
+# ready queue (per-registration priority flag); cached per level, bounded
+# — priorities are arbitrary caller ints, so an unbounded cache would be
+# a process-lifetime leak under priority-per-request workloads
+_PRIO_FLAGS: dict = {}
+_PRIO_FLAGS_MAX = 64
+
+
+def _step_flags(priority: int) -> ContinueFlags:
+    if priority <= 0:
+        return _STEP_FLAGS
+    flags = _PRIO_FLAGS.get(priority)
+    if flags is None:
+        flags = ContinueFlags(enqueue_complete=True, priority=priority)
+        if len(_PRIO_FLAGS) < _PRIO_FLAGS_MAX:
+            _PRIO_FLAGS[priority] = flags
+    return flags
 
 
 class ServeEngine:
@@ -169,7 +196,8 @@ class ServeEngine:
             self._prefill_fn = jax.jit(
                 make_prefill_step(cfg, self._padded_len))
             self._decode_fn = jax.jit(
-                make_paged_decode_step(cfg, self.page_size),
+                make_paged_decode_step(cfg, self.page_size,
+                                       return_tokens=True),
                 donate_argnums=(1,))
             self._suffix_fn = jax.jit(
                 make_paged_suffix_step(cfg, self.page_size),
@@ -187,14 +215,8 @@ class ServeEngine:
         else:
             self._prefill_fn = jax.jit(
                 make_prefill_step(cfg, self.max_cache_len))
-            decode_one = make_decode_step(cfg)
-
-            def _batched(params, caches, tokens, positions):
-                return jax.vmap(decode_one,
-                                in_axes=(None, 0, 0, 0))(params, caches,
-                                                         tokens, positions)
-
-            self._decode_fn = jax.jit(_batched, donate_argnums=(1,))
+            self._decode_fn = jax.jit(make_batched_decode_step(cfg),
+                                      donate_argnums=(1,))
 
         # -- slot state (loop thread only) --
         self._slots: List[Optional[Request]] = [None] * S
@@ -215,7 +237,8 @@ class ServeEngine:
                       "slot_steps": 0, "padded_steps": 0, "cancelled": 0,
                       "suffix_steps": 0, "suffix_tokens": 0, "deferred": 0,
                       "max_active": 0, "verify_steps": 0, "spec_tokens": 0,
-                      "draft_proposed": 0, "draft_accepted": 0}
+                      "draft_proposed": 0, "draft_accepted": 0,
+                      "stopped": 0, "expired": 0}
 
     # ------------------------------------------------------------- clients
     def submit(self, request: Request) -> Request:
@@ -316,8 +339,9 @@ class ServeEngine:
             req.push_device_token(first[0])
             self.stats["prefills"] += 1
             self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
-                                      (req, True, None, None),
-                                      cr=self.cr_steps, flags=_STEP_FLAGS)
+                                      (req, True, None, first),
+                                      cr=self.cr_steps,
+                                      flags=_step_flags(req.priority))
             return True
 
         self._ensure_state()
@@ -350,7 +374,8 @@ class ServeEngine:
                                np.asarray(req.prompt, np.int32).reshape(-1)]
         self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
                                   (req, False, slot, first),
-                                  cr=self.cr_steps, flags=_STEP_FLAGS)
+                                  cr=self.cr_steps,
+                                  flags=_step_flags(req.priority))
         return True
 
     def _prefill_paged(self, req: Request,
@@ -421,25 +446,42 @@ class ServeEngine:
     def _on_prefill_done(self, statuses, meta) -> None:
         req, retire_now, slot, first = meta
         req.on_first_token()
+        # deliver the first token (array complete by continuation time, so
+        # int() never blocks): streams see it here — before retirement —
+        # and stop-sequence matching starts with it
+        finished = req.deliver([int(first[0])])
         if retire_now:
-            self._retire(req)
+            # the budget is complete: the output the engine already paid
+            # for is returned even if the deadline just lapsed
+            self._retire(req, stopped=finished == "stop")
             return
-        # speculative context append — by continuation time the array is
-        # complete, so int() never blocks. Guard against the slot having
-        # been evicted (cancel) and possibly reseated before this fires.
+        # speculative context append. Guard against the slot having been
+        # evicted (cancel) and possibly reseated before this fires.
         if (slot is not None and self._ctx[slot] is not None
                 and self._slots[slot] is req):
             self._ctx[slot].append(int(first[0]))
+        if req.req_state in (RequestState.PREFILLING, RequestState.DECODING):
+            if finished == "stop":
+                self._finish_slot(slot, req, "stop")
+            elif req.past_deadline():
+                self._finish_slot(slot, req, "expired")
 
     # --------------------------------------------------------------- decode
-    def _sweep_cancelled(self,
-                         live: List[Tuple[int, Request]]) -> None:
-        """Drop cancellations before paying for a step (shared by the
-        plain-decode and speculative-verify dispatch paths)."""
+    def _sweep_dead(self, live: List[Tuple[int, Request]]) -> None:
+        """Drop cancellations and already-missed deadlines before paying
+        for a step (shared by the plain-decode and speculative-verify
+        dispatch paths). Deadline expiry is normally noticed by the
+        step-completion continuation; this dispatch-side sweep only saves
+        the step for work that is already doomed."""
+        now = time.monotonic()
         for i, r in list(live):
             if r.req_state is RequestState.CANCELLED:
                 self._evict_slot(i, r)
                 self.stats["cancelled"] += 1
+                live.remove((i, r))
+            elif r.past_deadline(now):
+                self._evict_slot(i, r)
+                self._expire(r)
                 live.remove((i, r))
 
     def _dispatch_step(self) -> bool:
@@ -447,44 +489,75 @@ class ServeEngine:
             return self._dispatch_verify()
         live = [(i, r) for i, r in enumerate(self._slots)
                 if r is not None and i not in self._draining]
-        self._sweep_cancelled(live)
+        self._sweep_dead(live)
         if not live:
             return False
         if self.paged:
-            logits, self.pool.arrays = self._decode_fn(
+            nxt, self.pool.arrays = self._decode_fn(
                 self.params, self.pool.arrays, self._tokens,
                 jnp.asarray(self._pos), jnp.asarray(self._tables))
         else:
-            logits, self._cache = self._decode_fn(
+            nxt, self._cache = self._decode_fn(
                 self.params, self._cache, self._tokens,
                 jnp.asarray(self._pos))
-        # per-slot logits are (1, 1, V); stacked (S, 1, 1, V)
-        nxt = jnp.argmax(logits[:, :, -1, :], axis=-1).astype(jnp.int32)
+        # the jitted step surfaces per-slot next tokens directly: (S, 1)
         self._tokens = nxt[..., None]                       # (S, 1, 1)
-        finishing: List[Tuple[int, Request]] = []
+        stepped: List[Tuple[int, Request, bool]] = []
+        prio = 0
         for i, r in live:
             r.push_device_token(nxt[i, 0])
             self._pos[i] += 1
-            if r.remaining == 0:
+            done = r.remaining == 0
+            if done:
                 self._draining.add(i)
-                finishing.append((i, r))
+            stepped.append((i, r, done))
+            prio = max(prio, r.priority)
         self._inflight += 1
         self.stats["steps"] += 1
         self.stats["slot_steps"] += len(live)
         self.stats["padded_steps"] += self.max_batch - len(live)
         self.stats["max_active"] = max(self.stats["max_active"], len(live))
         self.engine.continue_when(ArrayOp(nxt), self._on_step_done,
-                                  finishing, cr=self.cr_steps,
-                                  flags=_STEP_FLAGS)
+                                  (stepped, nxt), cr=self.cr_steps,
+                                  flags=_step_flags(prio))
         return True
 
-    def _on_step_done(self, statuses,
-                      finishing: List[Tuple[int, Request]]) -> None:
+    def _on_step_done(self, statuses, meta) -> None:
+        """Per-token bookkeeping when the step's device work is actually
+        complete: deliver each slot's token (streams wake here), then
+        retire slots that finished — by budget, by a stop-sequence match,
+        or by deadline expiry — releasing their pages in this same
+        continuation."""
+        stepped, nxt = meta
         self._inflight -= 1
-        for slot, req in finishing:
-            self._draining.discard(slot)
-            self._evict_slot(slot, req)
-            self._retire(req)
+        arr = np.asarray(nxt)
+        now = time.monotonic()
+        for slot, req, done in stepped:
+            if done:
+                self._draining.discard(slot)
+            finished = req.deliver([int(arr[slot, 0])])
+            state = req.req_state
+            if state is RequestState.FINISHED or \
+                    state is RequestState.EXPIRED:
+                # an earlier continuation (stop/deadline) already finished
+                # this request and freed the slot; the delivery above was
+                # dropped there too
+                continue
+            if state is RequestState.CANCELLED:
+                # non-draining slots are swept at the next dispatch; a
+                # draining slot sees no further dispatch, so free it here
+                if done and self._slots[slot] is req:
+                    self._evict_slot(slot, req)
+                    self.stats["cancelled"] += 1
+                continue
+            if finished == "stop":
+                self._finish_slot(slot, req, "stop")
+            elif done:
+                # a completed budget outranks a just-lapsed deadline:
+                # the full output is in hand, return it
+                self._finish_slot(slot, req, "retire")
+            elif req.past_deadline(now):
+                self._finish_slot(slot, req, "expired")
 
     # ---------------------------------------------------------- speculative
     def _slot_drafts(self, slot: int, req: Request) -> List[int]:
@@ -511,7 +584,7 @@ class ServeEngine:
         """
         live = [(i, r) for i, r in enumerate(self._slots)
                 if r is not None and i not in self._verifying]
-        self._sweep_cancelled(live)
+        self._sweep_dead(live)
         if not live:
             return False
         S, K = self.max_batch, self.speculate
@@ -544,7 +617,9 @@ class ServeEngine:
         self.stats["max_active"] = max(self.stats["max_active"], len(live))
         self.engine.continue_when(ArrayOp(emitted), self._on_verify_done,
                                   (live, emitted, accepts, n_drafts),
-                                  cr=self.cr_steps, flags=_STEP_FLAGS)
+                                  cr=self.cr_steps,
+                                  flags=_step_flags(
+                                      max(r.priority for _, r in live)))
         return True
 
     def _on_verify_done(self, statuses, meta) -> None:
@@ -557,13 +632,28 @@ class ServeEngine:
         self._inflight -= 1
         emitted = np.asarray(emitted)
         accepts = np.asarray(accepts)
+        now = time.monotonic()
         upd_slots: List[int] = []
         upd_tokens: List[int] = []
         for i, req in live:
-            self._verifying.discard(i)
-            if req.req_state is RequestState.CANCELLED:
-                self._evict_slot(i, req)
-                self.stats["cancelled"] += 1
+            state = req.req_state
+            # stale entry: an earlier continuation (prefill stop/deadline)
+            # already finished this request and freed the slot — which may
+            # since have been reseated (possibly with its own verify in
+            # flight). Touch NOTHING keyed by the slot index then.
+            stale = self._slots[i] is not req
+            if not stale:
+                self._verifying.discard(i)
+            if state is RequestState.FINISHED or \
+                    state is RequestState.EXPIRED:
+                continue
+            if state is RequestState.CANCELLED:
+                # cancel mid-verify: the whole accepted run is dropped —
+                # deliver() would refuse it anyway (cancel() returned
+                # while this step was in flight), so don't even push
+                if not stale:
+                    self._evict_slot(i, req)
+                    self.stats["cancelled"] += 1
                 continue
             a = int(accepts[i])
             n_emit = min(a + 1, req.remaining)   # a <= remaining-1 by cap
@@ -574,12 +664,19 @@ class ServeEngine:
             req.draft_tokens_accepted += a
             self.stats["draft_accepted"] += a
             self.stats["spec_tokens"] += n_emit
+            # the whole accepted run delivers in one call: streams see a
+            # burst, stop matching scans it token by token
+            finished = req.deliver(toks)
             if self._ctx[i] is not None:
                 self._ctx[i].extend(toks)
             self._pos[i] += n_emit
-            if req.remaining == 0:
-                self._evict_slot(i, req)
-                self._retire(req)
+            if finished == "stop":
+                self._finish_slot(i, req, "stop")
+            elif req.remaining == 0:
+                # completed budget outranks a just-lapsed deadline
+                self._finish_slot(i, req, "retire")
+            elif req.past_deadline(now):
+                self._finish_slot(i, req, "expired")
             else:
                 upd_slots.append(i)
                 upd_tokens.append(toks[-1])
@@ -593,6 +690,29 @@ class ServeEngine:
             self._tokens = jnp.where(
                 jnp.asarray(mask)[:, None, None],
                 jnp.asarray(vals)[:, None, None], self._tokens)
+
+    def _finish_slot(self, slot: Optional[int], req: Request,
+                     kind: str) -> None:
+        """Terminal transition from a step-completion continuation: free
+        the slot — releasing the request's pages in this same continuation
+        — and finish the request (``kind``: "retire" for budget, "stop"
+        for a stop-sequence match, "expired" for a missed deadline). A
+        later step already in flight for this slot may still write the
+        released pages: the same stale-write window the cancel path
+        tolerates (device dispatch order plus causal masking keep the
+        garbage invisible before it is overwritten)."""
+        if slot is not None and self._slots[slot] is req:
+            self._draining.discard(slot)
+            self._verifying.discard(slot)
+            self._evict_slot(slot, req)
+        else:
+            # slot already freed (or reseated) by an earlier path — make
+            # sure the pages still can't leak (release is idempotent)
+            self._release_pages(req)
+        if kind == "expired":
+            self._expire(req)
+        else:
+            self._retire(req, stopped=kind == "stop")
 
     def _evict_slot(self, slot: int, req: Request) -> None:
         """Free a slot and return the request's pages to the pool (every
@@ -610,13 +730,25 @@ class ServeEngine:
             self.pool.release(req.page_ids)
             req.page_ids = []
 
-    def _retire(self, req: Request) -> None:
-        if not req.retire():      # lost the race to a concurrent cancel()
-            self.stats["cancelled"] += 1
+    def _retire(self, req: Request, stopped: bool = False) -> None:
+        if not req.retire():
+            # lost the race to a concurrent cancel() (an idempotent
+            # re-retire of an already-finished request counts nothing)
+            if req.req_state is RequestState.CANCELLED:
+                self.stats["cancelled"] += 1
             return
+        if stopped:
+            self.stats["stopped"] += 1
         with self._lock:
             self._retired.append(req)
         self.stats["retired"] += 1
+
+    def _expire(self, req: Request) -> None:
+        """Deadline-expired: fail the request (partial tokens kept)."""
+        if req.expire():
+            self.stats["expired"] += 1
+        elif req.req_state is RequestState.CANCELLED:
+            self.stats["cancelled"] += 1
 
     # ----------------------------------------------------------------- loop
     def step(self) -> bool:

@@ -59,6 +59,27 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
     return decode
 
 
+def make_batched_decode_step(cfg: ModelConfig) -> Callable:
+    """Dense-mode slot decode with per-step token surfacing.
+
+    ``(params, caches(S,...), tokens(S,1,1), positions(S,)) →
+    (next_tokens(S,1), new caches)`` — one vmapped decode step over every
+    slot with the greedy argmax fused *inside* the jitted step, so the
+    engine's step-completion continuation receives the accepted tokens
+    directly (a vocab-times smaller transfer than logits, and one fewer
+    dispatch on the per-token critical path the streaming API rides).
+    """
+    decode_one = make_decode_step(cfg)
+
+    def step(params, caches, tokens, positions):
+        logits, new_caches = jax.vmap(
+            decode_one, in_axes=(None, 0, 0, 0))(params, caches, tokens,
+                                                 positions)
+        nxt = jnp.argmax(logits[:, :, -1, :], axis=-1).astype(jnp.int32)
+        return nxt, new_caches
+    return step
+
+
 # ------------------------------------------------------------- paged steps
 
 def _gather_pages(pool: Dict[str, jax.Array], table: jax.Array,
@@ -86,9 +107,15 @@ def _written_page(new_cache: Dict[str, jax.Array], pos: jax.Array,
             c[:, 0], pi * page_size, page_size, axis=1), new_cache)
 
 
-def make_paged_decode_step(cfg: ModelConfig, page_size: int) -> Callable:
+def make_paged_decode_step(cfg: ModelConfig, page_size: int, *,
+                           return_tokens: bool = False) -> Callable:
     """(params, pool, tokens(S,1,1), positions(S,), tables(S,max_pages))
-    → (logits(S,1,1,V), new pool). One token for every slot."""
+    → (logits(S,1,1,V), new pool). One token for every slot.
+
+    ``return_tokens=True`` surfaces the greedy next tokens instead:
+    → (next_tokens(S,1), new pool), with the argmax fused into the step
+    (same per-step token surfacing as ``make_batched_decode_step`` — the
+    serving engine's continuations deliver tokens straight from it)."""
     decode_one = make_decode_step(cfg)
 
     def step(params, pool, tokens, positions, tables):
@@ -104,6 +131,9 @@ def make_paged_decode_step(cfg: ModelConfig, page_size: int) -> Callable:
         new_pool = jax.tree_util.tree_map(
             lambda p, pg: p.at[:, targets].set(jnp.swapaxes(pg, 0, 1)),
             pool, pages)
+        if return_tokens:
+            nxt = jnp.argmax(logits[:, :, -1, :], axis=-1).astype(jnp.int32)
+            return nxt, new_pool
         return logits, new_pool
     return step
 

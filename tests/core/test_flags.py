@@ -295,3 +295,64 @@ def test_max_poll_cap_does_not_starve_other_crs(engine):
     assert ("cap", 1) not in seen
     capped.test()
     assert ("cap", 1) in seen
+
+
+# --------------------------------------------------------------- priority
+def test_priority_flag_resolution_and_validation():
+    info = make_info()
+    assert resolve(info, None).priority == 0
+    assert resolve(info, ContinueFlags(priority=3)).priority == 3
+    assert make_flags({"mpi_continue_priority": 2}).priority == 2
+    with pytest.raises(ValueError, match="priority"):
+        ContinueFlags(priority="high")
+
+
+def test_priority_jumps_scheduler_ready_queue(engine):
+    """A priority>0 registration drains ahead of normal-priority work
+    already sitting in the ready queue (defer_complete parks both)."""
+    cr = engine.continue_init()
+    seen = []
+    defer = ContinueFlags(defer_complete=True)
+    for i in range(2):
+        op = ManualOp()
+        engine.continue_when(op, lambda st, d, i=i: seen.append(("lo", i)),
+                             cr=cr, flags=defer)
+        op.trigger()
+    hi = ManualOp()
+    engine.continue_when(
+        hi, lambda st, d: seen.append("hi"), cr=cr,
+        flags=ContinueFlags(defer_complete=True, priority=1))
+    hi.trigger()
+    engine.tick()
+    assert seen[0] == "hi"
+    assert ("lo", 0) in seen and ("lo", 1) in seen
+
+
+def test_priority_jumps_poll_only_private_queue(engine):
+    cr = engine.continue_init(poll_only=True)
+    seen = []
+    lo = ManualOp()
+    engine.continue_when(lo, lambda st, d: seen.append("lo"), cr=cr)
+    lo.trigger()
+    hi = ManualOp()
+    engine.continue_when(hi, lambda st, d: seen.append("hi"), cr=cr,
+                         flags=ContinueFlags(priority=1))
+    hi.trigger()
+    cr.test()
+    assert seen == ["hi", "lo"]
+
+
+def test_priority_class_stays_fifo(engine):
+    """Priority jumps the queue but must NOT reorder continuations within
+    the priority class (an appendleft would run same-source completions
+    LIFO — e.g. a serve request's consecutive step continuations)."""
+    cr = engine.continue_init()
+    seen = []
+    flags = ContinueFlags(defer_complete=True, priority=1)
+    for i in range(3):
+        op = ManualOp()
+        engine.continue_when(op, lambda st, d, i=i: seen.append(i),
+                             cr=cr, flags=flags)
+        op.trigger()
+    engine.tick()
+    assert seen == [0, 1, 2]

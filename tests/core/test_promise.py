@@ -294,3 +294,88 @@ def test_shared_progress_driver_single_chain(engine):
 
     import asyncio
     assert asyncio.run(main())
+
+
+# ---------------------------------------------------- Signal (multi-shot)
+def test_signal_arm_then_set_then_rearm():
+    from repro.core import Signal
+    sig = Signal()
+    p1 = sig.wait()
+    assert p1.state == "pending"
+    sig.set("a")
+    assert p1.result(timeout=1) == "a"
+    p2 = sig.wait()
+    assert p2 is not p1 and p2.state == "pending"   # re-armed
+    sig.set("b")
+    assert p2.result(timeout=1) == "b"
+    assert sig.fired == 2
+
+
+def test_signal_set_between_arm_and_await_not_lost():
+    """The arm→check→await pattern: a set() racing in after wait() still
+    settles the armed promise, so the consumer cannot sleep through it."""
+    from repro.core import Signal
+    sig = Signal()
+    armed = sig.wait()
+    sig.set("raced")           # producer fires before the consumer waits
+    assert armed.result(timeout=1) == "raced"
+    # ...but a wait() AFTER the set observes only future generations
+    assert sig.wait().state == "pending"
+
+
+def test_signal_stream_consumer_threaded():
+    """Multi-shot delivery: one producer thread, one consumer using the
+    arm→check→await pattern over a shared buffer (the TokenStream
+    shape), every item observed exactly once, in order."""
+    from repro.core import Signal
+    sig = Signal()
+    buf, closed = [], []
+    lock = threading.Lock()
+
+    def producer():
+        for i in range(200):
+            with lock:
+                buf.append(i)
+            sig.set()
+        with lock:
+            closed.append(True)
+        sig.set()
+
+    got = []
+    t = threading.Thread(target=producer)
+    t.start()
+    taken = 0
+    while True:
+        p = sig.wait()                    # arm first
+        with lock:
+            if taken < len(buf):
+                got.append(buf[taken])
+                taken += 1
+                continue
+            if closed:
+                break
+        p.result(timeout=5)               # blocking "await"
+    t.join()
+    assert got == list(range(200))
+
+
+def test_signal_asyncio_await():
+    from repro.core import Signal
+    sig = Signal()
+
+    async def main():
+        out = []
+
+        async def consumer():
+            for _ in range(3):
+                p = sig.wait()
+                out.append(await p)
+            return out
+
+        task = asyncio.ensure_future(consumer())
+        for v in ("x", "y", "z"):
+            await asyncio.sleep(0.005)
+            sig.set(v)
+        return await task
+
+    assert asyncio.run(main()) == ["x", "y", "z"]

@@ -10,9 +10,9 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import lm
-from repro.serve import (NgramDrafter, PagePool, RepeatDrafter, Request,
-                         RequestState, ServeEngine, greedy_generate,
-                         serve_requests)
+from repro.serve import (GenerationConfig, NgramDrafter, PagePool,
+                         RepeatDrafter, Request, RequestState, ServeEngine,
+                         greedy_generate, serve_requests)
 from repro.serve.steps import make_decode_step, make_prefill_step
 
 
@@ -102,7 +102,7 @@ def test_speculate_requires_paged(small_model):
     with pytest.raises(ValueError, match="paged"):
         ServeEngine(cfg, params, paged=False, speculate=4)
     with pytest.raises(ValueError):
-        Request([1, 2], 4, speculate=-1)
+        Request([1, 2], GenerationConfig(max_tokens=4, speculate=-1))
 
 
 # -------------------------------------------------------- token identity
@@ -169,7 +169,7 @@ def test_spec_mixed_accept_lengths_in_one_batch(spec_engine, greedy_ref,
     lengths = [18, 25, 11]
     base = [greedy_ref(p, n) for p, n in zip(prompts, lengths)]
     reqs = _serve(spec_engine,
-                  [Request(p, n, speculate=s)
+                  [Request(p, GenerationConfig(max_tokens=n, speculate=s))
                    for p, n, s in zip(prompts, lengths, specs)])
     assert [r.tokens for r in reqs] == base
     assert reqs[0].draft_tokens_proposed == 0    # opted out
@@ -311,7 +311,9 @@ def test_spec_identity_property(spec_engine, greedy_ref, small_model, seed):
     knobs = [rng.choice([0, 1, 2, 3, None]) for _ in range(n)]
     base = [greedy_ref(p, ln) for p, ln in zip(prompts, lengths)]
     reqs = _serve(spec_engine,
-                  [Request(p, ln, speculate=None if k is None else int(k))
+                  [Request(p, GenerationConfig(
+                      max_tokens=ln,
+                      speculate=None if k is None else int(k)))
                    for p, ln, k in zip(prompts, lengths, knobs)])
     assert [r.tokens for r in reqs] == base
     assert spec_engine.metrics()["pages_in_use"] == 0
