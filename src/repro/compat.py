@@ -11,6 +11,13 @@ the same source works on both:
   older builds, where ``jax.make_mesh`` also rejects an ``axis_types``
   kwarg; meshes there are implicitly Auto on every axis, which is the
   behaviour we want anyway.
+* Pallas: ``jax.experimental.pallas`` (and its TPU dialect) is the one
+  import the canary CI leg can break silently — experimental namespaces
+  move without deprecation cycles. Kernel modules import ``pl``/``pltpu``
+  from here instead of from ``jax.experimental`` directly, and the ops
+  wrappers consult :func:`pallas_available` so a pallas-less build
+  degrades to the ``xla`` reference path with a visible warning instead
+  of an ImportError at collection time.
 """
 from __future__ import annotations
 
@@ -49,6 +56,36 @@ def cost_analysis(compiled) -> dict:
     if isinstance(ca, (list, tuple)):
         ca = ca[0] if ca else {}
     return ca
+
+
+try:  # canary-sensitive: experimental namespaces move without notice
+    from jax.experimental import pallas as pl
+except ImportError:  # pragma: no cover - exercised only on broken canaries
+    pl = None
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def pallas_available() -> bool:
+    """True when both ``pallas`` and its TPU dialect import cleanly."""
+    return pl is not None and pltpu is not None
+
+
+def require_pallas():
+    """Return ``(pl, pltpu)`` or raise a targeted ImportError.
+
+    Kernel entry points call this at trace time so a pallas-less build
+    fails with an actionable message (use the ``xla`` impl) instead of an
+    AttributeError on a ``None`` module.
+    """
+    if not pallas_available():
+        raise ImportError(
+            "jax.experimental.pallas(.tpu) is unavailable on this JAX "
+            "build; select the 'xla' kernel impl "
+            "(repro.kernels.impl.use_impl) or pin a JAX with Pallas")
+    return pl, pltpu
 
 
 def make_mesh(shape, axes, **kwargs: Any):

@@ -22,8 +22,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+# canary-sensitive imports route through compat: ``pl``/``pltpu`` are None
+# on a pallas-less build and flash_attention() raises a targeted error at
+# trace time (the ops wrapper never gets here — it downgrades to 'xla')
+from repro.compat import pl, pltpu, require_pallas
 
 NEG_INF = -1e30
 
@@ -105,6 +108,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     block_q: int = 512, block_k: int = 512,
                     interpret: bool = False) -> jax.Array:
     """q: (B, Sq, H, D);  k, v: (B, Sk, KV, D). Returns (B, Sq, H, D)."""
+    require_pallas()
     B, Sq, H, D = q.shape
     _, Sk, KV, _ = k.shape
     groups = H // KV

@@ -13,11 +13,13 @@ from __future__ import annotations
 
 import contextlib
 import threading
+import warnings
 
 import jax
 
 _TLS = threading.local()
 VALID = ("xla", "pallas", "pallas_interpret")
+_WARNED_NO_PALLAS = False
 
 
 def backend_default() -> str:
@@ -29,6 +31,25 @@ def resolve(impl: str | None = None) -> str:
         impl = getattr(_TLS, "impl", None) or backend_default()
     if impl not in VALID:
         raise ValueError(f"unknown kernel impl {impl!r}; expected {VALID}")
+    return impl
+
+
+def resolve_runnable(impl: str | None = None) -> str:
+    """:func:`resolve`, then downgrade ``pallas*`` → ``xla`` (one visible
+    warning) when the build lacks Pallas — the canary-safe entry point
+    for ops wrappers, so a JAX that moved ``jax.experimental.pallas``
+    degrades to the reference path instead of breaking imports."""
+    from repro import compat
+    impl = resolve(impl)
+    if impl != "xla" and not compat.pallas_available():
+        global _WARNED_NO_PALLAS
+        if not _WARNED_NO_PALLAS:
+            warnings.warn(
+                "jax.experimental.pallas is unavailable on this JAX "
+                "build; kernel ops fall back to the 'xla' reference "
+                "implementation", RuntimeWarning, stacklevel=3)
+            _WARNED_NO_PALLAS = True
+        return "xla"
     return impl
 
 

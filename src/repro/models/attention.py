@@ -211,6 +211,43 @@ def decode_attention(params, x, cfg: ModelConfig, cache: Dict[str, Any],
     return out, {"k": ck, "v": cv}
 
 
+def paged_decode_attention(params, x, cfg: ModelConfig,
+                           k_pages: jax.Array, v_pages: jax.Array,
+                           positions: jax.Array, tables: jax.Array,
+                           n_valid: jax.Array, *, page_size: int
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused paged decode over one layer's KV page pool.
+
+    ``x``: (S, W, d_model) — S serve slots, each with a ``W``-token query
+    window (W=1 plain decode, W=1+K speculative verify, W=padded tail for
+    suffix prefill). ``positions (S,)`` is the absolute position of each
+    slot's window row 0, ``tables (S, T)`` the per-slot page tables and
+    ``n_valid (S,)`` the accept mask (rows written; 0 = idle slot).
+
+    The gather → insert → attend → write-back all happens inside
+    :func:`repro.kernels.paged_attention.ops.paged_attention`; this
+    wrapper only does qkv projection (RoPE at per-slot absolute
+    positions) and the output projection. Returns
+    ``(out (S, W, d_model), new_k_pages, new_v_pages)`` — the pool
+    arrays updated in place when the Pallas path runs (aliased outputs).
+    """
+    from repro.kernels.paged_attention import ops as paged_ops
+    S, W, _ = x.shape
+    offs = jnp.arange(W, dtype=jnp.int32)
+    pos2d = positions[:, None] + offs[None, :]              # (S, W)
+    q, k, v = _project_qkv(params, x, cfg, pos2d)
+    q = constrain(q, "batch", None, "act_heads", None)
+    o, new_k, new_v = paged_ops.paged_attention(
+        q, k, v, k_pages, v_pages, tables, positions, n_valid,
+        page_size=page_size, scale=cfg.resolved_head_dim ** -0.5)
+    o = o.astype(cfg.dtype)
+    o = constrain(o, "batch", None, "act_heads", None)
+    wo = gathered(params["wo"], "heads", None, None,
+                  gather=cfg.gather_weights)
+    out = jnp.einsum("bshk,hkd->bsd", o, wo.astype(cfg.dtype))
+    return out, new_k, new_v
+
+
 # ------------------------------------------------------------ cross-attn
 def init_cross_attention(key, cfg: ModelConfig) -> Dict[str, Any]:
     return init_attention(key, cfg)

@@ -139,6 +139,23 @@ def _block_decode(lp, x, cache, pos, cfg: ModelConfig):
     return x + mlp(lp["mlp"], h2, cfg.gather_weights), new_cache
 
 
+def _block_paged_decode(lp, x, k_pages, v_pages, cfg: ModelConfig,
+                        positions, tables, n_valid, page_size: int):
+    """`_block_decode` over the paged pool: attention is the fused paged
+    kernel; the residual/mlp/moe structure is identical."""
+    h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    a, nk, nv = attn_mod.paged_decode_attention(
+        lp["attn"], h, cfg, k_pages, v_pages, positions, tables, n_valid,
+        page_size=page_size)
+    if cfg.parallel_block:
+        return x + a + mlp(lp["mlp"], h, cfg.gather_weights), nk, nv
+    x = x + a
+    h2 = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+    if cfg.family == MOE:
+        return x + moe_mod.moe_block(lp["moe"], h2, cfg), nk, nv
+    return x + mlp(lp["mlp"], h2, cfg.gather_weights), nk, nv
+
+
 def _block_prefill(lp, x, cache, cfg: ModelConfig):
     if cfg.family in (SSM, HYBRID):
         # chunked scan also yields the final SSD + conv state → decode cache
@@ -349,3 +366,36 @@ def lm_decode_step(params, token: jax.Array, cfg: ModelConfig, cache: Any,
                              pos=pos)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     return lm_logits(params["embed"], x, cfg), cache
+
+
+def lm_paged_decode(params, tokens: jax.Array, cfg: ModelConfig,
+                    pool: Dict[str, jax.Array], positions: jax.Array,
+                    tables: jax.Array, n_valid: jax.Array, *,
+                    page_size: int) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Fused paged decode over ALL serve slots in one call.
+
+    ``tokens (S, W)`` int32 — each slot's query window (W=1 decode,
+    W=1+K verify, W=padded tail for suffix prefill); ``pool`` is the
+    layer-stacked page pool ``{"k","v": (L, P+1, ps, KVp, hd)}``;
+    ``positions``/``n_valid``: (S,) int32; ``tables``: (S, T) int32.
+
+    Returns ``(logits (S, W, vocab), new_pool)``. Layers run under
+    ``lax.scan`` with per-layer pool leaves as scanned inputs/outputs,
+    so a donated pool updates in place layer by layer.
+    """
+    if cfg.family in (SSM, HYBRID):
+        raise NotImplementedError("paged decode requires KV attention")
+    if not cfg.scan_layers:
+        raise NotImplementedError("fused paged decode requires scan_layers")
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    def body(h, inp):
+        lp, kp, vp = inp
+        h, nk, nv = _block_paged_decode(lp, h, kp, vp, cfg, positions,
+                                        tables, n_valid, page_size)
+        return h, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["layers"], pool["k"], pool["v"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params["embed"], x, cfg), {"k": nk, "v": nv}

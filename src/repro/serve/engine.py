@@ -52,7 +52,15 @@ cache and position:
   larger effective batch. Prompts sharing a page-aligned prefix with a
   resident request map those pages read-only and skip re-prefilling them;
   pages return to the pool in the retirement continuation (the paper's
-  callback-driven lifecycle owns deallocation too).
+  callback-driven lifecycle owns deallocation too). Paged steps default
+  to the **fused** Pallas paged-attention kernel
+  (``kernels.paged_attention``): one kernel walks the page tables on
+  device — gather, flash-style attend, accept-masked KV write — so
+  decode/verify/suffix never materialize a contiguous per-slot view and
+  need no host-built write tables (``fused=False`` keeps the unfused
+  gather/scatter steps as the A/B baseline). Page tables live device-
+  resident between steps, refreshed only for slots whose placement
+  changed.
 * *dense* (``paged=False``, and automatically for SSM/hybrid/audio/SWA
   configs) — the original per-slot stacked cache, each slot padded to
   ``max_cache_len``.
@@ -79,6 +87,9 @@ from repro.serve.drafter import Drafter, NgramDrafter
 from repro.serve.kv_cache import PagePool, paged_supported, pages_for
 from repro.serve.request import Request, RequestState, summarize
 from repro.serve.steps import (make_batched_decode_step,
+                               make_fused_paged_decode_step,
+                               make_fused_paged_suffix_step,
+                               make_fused_paged_verify_step,
                                make_paged_decode_step, make_paged_suffix_step,
                                make_paged_verify_step, make_prefill_scatter,
                                make_prefill_step)
@@ -139,7 +150,8 @@ class ServeEngine:
                  total_pages: Optional[int] = None,
                  max_seq_len: Optional[int] = None,
                  speculate: int = 0,
-                 drafter: Optional[Drafter] = None) -> None:
+                 drafter: Optional[Drafter] = None,
+                 fused: Optional[bool] = None) -> None:
         if cfg.family == AUDIO:
             raise NotImplementedError(
                 "ServeEngine drives token-in/token-out LM decode; audio "
@@ -154,12 +166,22 @@ class ServeEngine:
             raise ValueError(
                 "speculative decoding runs through the paged verify step; "
                 "speculate > 0 requires paged=True")
+        if fused and not paged:
+            raise ValueError("fused paged-attention steps require paged=True")
         self.cfg = cfg
         self.params = params
         self.max_batch = int(max_batch)
         self.max_cache_len = int(max_cache_len)
         self.max_inflight = max(1, int(max_inflight))
         self.paged = bool(paged)
+        # fused (default in paged mode): the whole batch runs through ONE
+        # lm_paged_decode call — the paged-attention kernel walks page
+        # tables on device (gather + attend + accept-masked write), so
+        # paged decode needs no _gather_pages view, no write tables, and
+        # no per-slot vmap. fused=False keeps the original unfused
+        # gather/scatter steps (the A/B baseline the kernel benchmark
+        # measures against).
+        self.fused = bool(fused) if fused is not None else self.paged
         self.speculate = max(0, int(speculate))
         self.drafter = drafter if drafter is not None else NgramDrafter()
         self._own_engine = engine is None
@@ -193,23 +215,39 @@ class ServeEngine:
             self.pool = PagePool(cfg, n_pool, self.page_size)
             self._tables = np.full((S, self._table_pages),
                                    self.pool.null_page, np.int32)
+            # device-resident mirror of _tables, refreshed incrementally:
+            # only rows touched since the last step re-upload (placement /
+            # eviction), instead of the full (S, table_pages) host → device
+            # transfer every dispatch
+            self._tables_dev: Optional[jax.Array] = None
+            self._tables_dirty: Set[int] = set()
             self._prefill_fn = jax.jit(
                 make_prefill_step(cfg, self._padded_len))
-            self._decode_fn = jax.jit(
-                make_paged_decode_step(cfg, self.page_size,
-                                       return_tokens=True),
-                donate_argnums=(1,))
-            self._suffix_fn = jax.jit(
-                make_paged_suffix_step(cfg, self.page_size),
-                donate_argnums=(1,))
+            if self.fused:
+                self._decode_fn = jax.jit(
+                    make_fused_paged_decode_step(cfg, self.page_size),
+                    donate_argnums=(1,))
+                self._suffix_fn = jax.jit(
+                    make_fused_paged_suffix_step(cfg, self.page_size),
+                    donate_argnums=(1,))
+            else:
+                self._decode_fn = jax.jit(
+                    make_paged_decode_step(cfg, self.page_size,
+                                           return_tokens=True),
+                    donate_argnums=(1,))
+                self._suffix_fn = jax.jit(
+                    make_paged_suffix_step(cfg, self.page_size),
+                    donate_argnums=(1,))
             self._scatter_fn = jax.jit(
                 make_prefill_scatter(cfg, self.page_size),
                 donate_argnums=(0,))
             if self.speculate:
-                self._verify_fn = jax.jit(
+                vf = make_fused_paged_verify_step(cfg, self.page_size,
+                                                  self.speculate) \
+                    if self.fused else \
                     make_paged_verify_step(cfg, self.page_size,
-                                           self.speculate),
-                    donate_argnums=(1,))
+                                           self.speculate)
+                self._verify_fn = jax.jit(vf, donate_argnums=(1,))
                 self._verify_pages = 1 + pages_for(self.speculate,
                                                    self.page_size)
         else:
@@ -361,6 +399,7 @@ class ServeEngine:
         else:
             self._tables[slot, :] = self.pool.null_page
             self._tables[slot, :len(req.page_ids)] = req.page_ids
+            self._tables_dirty.add(slot)
         req.push_device_token(first[0])
         self.stats["prefills"] += 1
         self._tokens = self._tokens.at[slot].set(first[:, None])
@@ -418,9 +457,20 @@ class ServeEngine:
             suffix = prompt[:, start:]
             if padded != tail:
                 suffix = jnp.pad(suffix, ((0, 0), (0, padded - tail)))
-            logits, pool.arrays = self._suffix_fn(
-                self.params, pool.arrays, suffix, jnp.int32(start),
-                self._padded_table(table), jnp.asarray(scat))
+            if self.fused:
+                # the fused kernel writes rows [0, tail) through the
+                # gather table itself — the prefix is page-aligned, so
+                # every written entry is request-owned; shared pages and
+                # padding rows are untouched (n_valid masks the pad)
+                logits, pool.arrays = self._suffix_fn(
+                    self.params, pool.arrays, suffix,
+                    jnp.asarray([start], jnp.int32),
+                    self._padded_table(table)[None],
+                    jnp.asarray([tail], jnp.int32))
+            else:
+                logits, pool.arrays = self._suffix_fn(
+                    self.params, pool.arrays, suffix, jnp.int32(start),
+                    self._padded_table(table), jnp.asarray(scat))
             self.stats["suffix_steps"] += 1
             self.stats["suffix_tokens"] += tail
             first = jnp.argmax(logits[:, tail - 1], axis=-1).astype(jnp.int32)
@@ -442,6 +492,27 @@ class ServeEngine:
         out = np.full(self._table_pages, self.pool.null_page, np.int32)
         out[:len(table)] = table
         return jnp.asarray(out)
+
+    def _device_tables(self) -> jax.Array:
+        """Device copy of the page tables, updated incrementally.
+
+        Placement and eviction mark their slot dirty; each dispatch then
+        uploads only the dirty rows into the resident array instead of
+        re-transferring all (S, table_pages) entries. The row-set scatter
+        compiles once per distinct dirty-row COUNT — bounded by
+        ``max_batch + 1`` shapes over the engine's lifetime. Steady-state
+        decode (no placements) re-uses the resident array with zero
+        transfer."""
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self._tables)
+            self._tables_dirty.clear()
+        elif self._tables_dirty:
+            rows = sorted(self._tables_dirty)
+            self._tables_dev = self._tables_dev.at[
+                jnp.asarray(rows, jnp.int32)].set(
+                jnp.asarray(self._tables[rows]))
+            self._tables_dirty.clear()
+        return self._tables_dev
 
     def _on_prefill_done(self, statuses, meta) -> None:
         req, retire_now, slot, first = meta
@@ -492,10 +563,21 @@ class ServeEngine:
         self._sweep_dead(live)
         if not live:
             return False
-        if self.paged:
+        if self.paged and self.fused:
+            # n_valid: 1 = write this slot's token, 0 = idle/draining slot
+            # (the kernel then writes nothing and outputs zeros for it —
+            # strictly tighter than the unfused path, which runs idle
+            # lanes too and parks their garbage writes on the null page)
+            nv = np.zeros(self.max_batch, np.int32)
+            nv[[i for i, _ in live]] = 1
             nxt, self.pool.arrays = self._decode_fn(
                 self.params, self.pool.arrays, self._tokens,
-                jnp.asarray(self._pos), jnp.asarray(self._tables))
+                jnp.asarray(self._pos), self._device_tables(),
+                jnp.asarray(nv))
+        elif self.paged:
+            nxt, self.pool.arrays = self._decode_fn(
+                self.params, self.pool.arrays, self._tokens,
+                jnp.asarray(self._pos), self._device_tables())
         else:
             nxt, self._cache = self._decode_fn(
                 self.params, self._cache, self._tokens,
@@ -590,23 +672,37 @@ class ServeEngine:
         S, K = self.max_batch, self.speculate
         drafts = np.zeros((S, K), np.int32)
         n_drafts = np.zeros(S, np.int32)
-        # write tables: rows for idle / still-verifying slots stay all
-        # null, so their (garbage) lanes scatter into the scratch page
-        wtables = np.full((S, self._verify_pages), self.pool.null_page,
-                          np.int32)
         for i, r in live:
             d = self._slot_drafts(i, r)
             n_drafts[i] = len(d)
             drafts[i, :len(d)] = d
-            wtables[i] = self.pool.write_table(r.page_ids,
-                                               int(self._pos[i]),
-                                               self._verify_pages)
         tokens = jnp.concatenate(
             [self._tokens, jnp.asarray(drafts)[:, None, :]], axis=2)
-        emitted, accepts, self.pool.arrays = self._verify_fn(
-            self.params, self.pool.arrays, tokens, jnp.asarray(self._pos),
-            jnp.asarray(self._tables), jnp.asarray(wtables),
-            jnp.asarray(n_drafts))
+        if self.fused:
+            # no host-built write tables at all: the kernel accept-masks
+            # the window to n_valid = 1 + live drafts (0 for idle /
+            # still-verifying slots) and routes overflow into the scratch
+            # page through the gather table's null padding
+            nv = np.zeros(S, np.int32)
+            for i, _ in live:
+                nv[i] = 1 + n_drafts[i]
+            emitted, accepts, self.pool.arrays = self._verify_fn(
+                self.params, self.pool.arrays, tokens,
+                jnp.asarray(self._pos), self._device_tables(),
+                jnp.asarray(nv))
+        else:
+            # write tables: rows for idle / still-verifying slots stay all
+            # null, so their (garbage) lanes scatter into the scratch page
+            wtables = np.full((S, self._verify_pages), self.pool.null_page,
+                              np.int32)
+            for i, r in live:
+                wtables[i] = self.pool.write_table(r.page_ids,
+                                                   int(self._pos[i]),
+                                                   self._verify_pages)
+            emitted, accepts, self.pool.arrays = self._verify_fn(
+                self.params, self.pool.arrays, tokens,
+                jnp.asarray(self._pos), self._device_tables(),
+                jnp.asarray(wtables), jnp.asarray(n_drafts))
         self._verifying.update(i for i, _ in live)
         self._inflight += 1
         self.stats["steps"] += 1
@@ -723,6 +819,7 @@ class ServeEngine:
         self._ctx[slot] = None
         if self.paged:
             self._tables[slot, :] = self.pool.null_page
+            self._tables_dirty.add(slot)
         self._release_pages(req)
 
     def _release_pages(self, req: Request) -> None:
@@ -798,6 +895,7 @@ class ServeEngine:
         out = summarize(self.retired)
         out.update(self.stats)
         out["paged"] = self.paged
+        out["fused"] = self.fused
         out["speculate"] = self.speculate
         if self.stats["draft_proposed"]:
             # engine-wide accept rate (includes cancelled requests;

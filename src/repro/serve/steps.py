@@ -227,6 +227,75 @@ def make_paged_suffix_step(cfg: ModelConfig, page_size: int) -> Callable:
     return step
 
 
+# ------------------------------------------------------- fused paged steps
+#
+# The make_fused_* factories run the whole batch through ONE
+# ``lm.lm_paged_decode`` call: the Pallas kernel (or its jnp reference
+# under impl="xla") walks each slot's page table on device — gather,
+# flash-style attend, accept-masked KV write — so there is no
+# ``_gather_pages`` materialization, no ``_written_page`` slice, no
+# host-built write tables, and no per-slot vmap. ``n_valid`` carries the
+# write mask: 0 = idle slot (nothing written, zero output), 1 = decode,
+# ``1 + K`` = verify window, tail length = suffix prefill. Overflow rows
+# land in the scratch page by the table-padding contract, which is
+# exactly ``PagePool.write_table``'s rollback behaviour.
+
+def make_fused_paged_decode_step(cfg: ModelConfig, page_size: int) -> Callable:
+    """(params, pool, tokens(S,1,1), positions(S,), tables(S,T),
+    n_valid(S,)) → (next_tokens(S,1), new pool). One fused kernel pass
+    for every slot; greedy argmax fused into the step like
+    ``make_paged_decode_step(return_tokens=True)``."""
+    def step(params, pool, tokens, positions, tables, n_valid):
+        logits, new_pool = lm.lm_paged_decode(
+            params, tokens[:, 0, :], cfg, pool, positions, tables, n_valid,
+            page_size=page_size)
+        nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        return nxt, new_pool
+    return step
+
+
+def make_fused_paged_verify_step(cfg: ModelConfig, page_size: int,
+                                 n_draft: int) -> Callable:
+    """Speculative verify on the fused kernel: ``(params, pool,
+    tokens(S,1,1+K), positions(S,), tables(S,T), n_valid(S,))`` →
+    ``(emitted(S,1+K), accepts(S,), new pool)``.
+
+    Same accept semantics as ``make_paged_verify_step`` but with no
+    ``write_tables`` operand at all: ``n_valid = 1 + k_live`` for live
+    slots (0 idle) accept-masks the KV writes inside the kernel, and the
+    gather table doubles as the write map (out-of-footprint rows fall in
+    the scratch page). Rejected-but-written rows sit beyond the advancing
+    causal horizon until the next verify window overwrites them."""
+    K = n_draft
+
+    def step(params, pool, tokens, positions, tables, n_valid):
+        tok = tokens[:, 0, :]                                # (S, 1+K)
+        logits, new_pool = lm.lm_paged_decode(
+            params, tok, cfg, pool, positions, tables, n_valid,
+            page_size=page_size)
+        emitted = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jnp.maximum(n_valid - 1, 0)                      # live drafts
+        ok = ((tok[:, 1:] == emitted[:, :-1])
+              & (jnp.arange(K, dtype=jnp.int32)[None, :] < k[:, None]))
+        accepts = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        return emitted, accepts.astype(jnp.int32), new_pool
+    return step
+
+
+def make_fused_paged_suffix_step(cfg: ModelConfig, page_size: int) -> Callable:
+    """Chunked suffix prefill on the fused kernel: (params, pool,
+    tokens(1,Sw), positions(1,), tables(1,T), n_valid(1,)) →
+    (logits(1,Sw,V), new pool). ``Sw`` is the page-padded tail;
+    ``n_valid`` its real length — padded rows are never written and the
+    clamped causal horizon keeps them off unwritten positions, while
+    shared prefix pages (positions < pos) are read, never written."""
+    def step(params, pool, tokens, positions, tables, n_valid):
+        return lm.lm_paged_decode(
+            params, tokens, cfg, pool, positions, tables, n_valid,
+            page_size=page_size)
+    return step
+
+
 def make_prefill_scatter(cfg: ModelConfig, page_size: int) -> Callable:
     """Blit a dense prefill cache into the pool: (pool, dense_cache,
     table(max_pages,)) → new pool. ``dense_cache`` leaves are
