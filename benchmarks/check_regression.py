@@ -108,6 +108,15 @@ RECORDED = {
         lambda d: d["stream"]["streaming"]["ttft_mean_s"] * 1e3,
     "stream_inter_token_p99_ms":
         lambda d: d["stream"]["streaming"]["inter_token_p99_s"] * 1e3,
+    # disaggregated prefill/decode vs colocated: recorded only — in a
+    # single process the transport hop is pure overhead, so the ratio is
+    # a cost-of-the-boundary observable (~0.7-1.0x on CPU), not a win to
+    # gate; the correctness claims (token identity, leak-freedom,
+    # pipelining) are enforced by tests/serve/test_disagg.py in CI
+    "disagg_vs_colocated_tokens_per_s":
+        lambda d: d["disagg"]["tokens_per_s_ratio"],
+    "disagg_bytes_shipped_per_request":
+        lambda d: d["disagg"]["bytes_shipped_per_request"],
 }
 
 

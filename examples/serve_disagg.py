@@ -1,0 +1,102 @@
+"""Disaggregated prefill/decode serving example.
+
+Two role engines share one process but are connected ONLY by the
+in-process continuation transport: the prefill role runs chunked prompt
+prefill and ships each finished KV page the moment its export completes,
+the decode role's delivery continuations install the blocks into its own
+page pool, and the request flips into a decode slot when the last block
+lands — no barrier, per-block pipelining. The demo traces the handoff
+lifecycle (header → ship/install interleaved with later prefill chunks →
+prefill_done → landed → seat), verifies the token streams are identical
+to a colocated engine on the same traffic, and prints the transport's
+per-tag accounting (control vs KV-block bytes).
+
+Run:  PYTHONPATH=src python examples/serve_disagg.py [--arch paper_demo]
+(the architecture must support the paged KV cache: dense/MoE family,
+scan_layers, no sliding window)
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import Request, serve_requests
+from repro.serve.disagg import CTRL_TAG, DisaggServer, block_tag
+
+
+def main(args):
+    cfg = get_config(args.arch, reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [
+        jax.random.randint(jax.random.PRNGKey(i), (args.prompt_len,),
+                           0, cfg.vocab_size).tolist()
+        for i in range(args.requests)
+    ]
+    geometry = dict(max_batch=args.slots,
+                    max_cache_len=args.prompt_len + args.new_tokens,
+                    page_size=4, max_seq_len=args.prompt_len + args.new_tokens)
+
+    print("== colocated baseline ==")
+    colo = serve_requests(cfg, params,
+                          [Request(p, args.new_tokens) for p in prompts],
+                          paged=True, timeout=600, **geometry)
+    baseline = [r.tokens for r in colo]
+    print(f"   {len(baseline)} requests, "
+          f"{sum(len(t) for t in baseline)} tokens")
+
+    print("== disaggregated (prefill role -> transport -> decode role) ==")
+    reqs = [Request(p, args.new_tokens) for p in prompts]
+    srv = DisaggServer(cfg, params, chunk_pages=1, **geometry)
+    try:
+        t0 = time.monotonic()
+        for r in reqs:
+            srv.submit(r)
+        srv.close_intake()
+        srv.run(timeout=600)
+        dt = time.monotonic() - t0
+
+        # the handoff lifecycle for the first request, in driver order —
+        # note installs of early blocks landing BEFORE prefill_done
+        rid = reqs[0].req_id
+        trace = [e for e in srv.events if e[1] == rid]
+        print(f"   request {rid} lifecycle:")
+        for e in trace:
+            print(f"     {e[0]:<16} {e[2:] if len(e) > 2 else ''}")
+        first_install = srv.events.index(("install", rid, 0))
+        done = srv.events.index(("prefill_done", rid))
+        print(f"   first block installed at event #{first_install}, "
+              f"prefill finished at #{done} -> "
+              f"{'PIPELINED' if first_install < done else 'sequential'}")
+
+        assert [r.tokens for r in reqs] == baseline, "token mismatch!"
+        print(f"   token streams identical to colocated: OK ({dt:.2f}s)")
+
+        m = srv.metrics()
+        print(f"   shipped {m['blocks_shipped']} blocks, "
+              f"{m['bytes_shipped_per_request']:.0f} B/request")
+        stats = m["transport"]
+        ctrl = stats["per_tag"][CTRL_TAG]
+        blk = stats["per_tag"][block_tag(rid)]
+        print(f"   per-tag: ctrl {ctrl['sent_msgs']} msgs "
+              f"({ctrl['sent_bytes']} B), request-{rid} KV "
+              f"{blk['sent_msgs']} blocks ({blk['sent_bytes']} B)")
+        print(f"   leak check: decode pool {srv.decode.pool.pages_in_use} "
+              f"pages in use, prefill pool "
+              f"{srv.prefill.pool.pages_in_use} -> "
+              f"{'OK' if srv.decode.pool.pages_in_use == 0 and srv.prefill.pool.pages_in_use == 0 else 'LEAK'}")
+    finally:
+        srv.shutdown()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper_demo",
+                    help="architecture (reduced config is used; must "
+                    "support the paged KV cache)")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    main(ap.parse_args())

@@ -31,11 +31,22 @@ ANY_TAG = -1
 
 
 def _payload_nbytes(payload: Any) -> int:
+    """Wire size of a payload for eager/rendezvous choice and accounting.
+
+    Array-likes report their ``nbytes`` (typed messages may expose a
+    computed ``nbytes`` property covering their array fields); containers
+    sum their elements plus a small framing constant, so a KV-block
+    message carried as a dict/tuple of device arrays is accounted at its
+    real payload size rather than the control-message default."""
     if isinstance(payload, (bytes, bytearray, memoryview)):
         return len(payload)
     nbytes = getattr(payload, "nbytes", None)
     if nbytes is not None:
         return int(nbytes)
+    if isinstance(payload, (list, tuple)):
+        return 16 + sum(_payload_nbytes(v) for v in payload)
+    if isinstance(payload, dict):
+        return 16 + sum(_payload_nbytes(v) for v in payload.values())
     return 64  # control-message default
 
 
@@ -75,9 +86,24 @@ class RecvOp(MessageOp):
                 and (self.tag == ANY_TAG or self.tag == tag))
 
     def cancel(self) -> bool:
-        """Remove a posted receive (paper §3.6); no-op if already matched."""
+        """Remove a posted receive (paper §3.6); no-op if already matched.
+
+        Complete-or-cancel is atomic against a concurrent ``_deliver``:
+        either this call wins the matching race and the op completes
+        CANCELLED, or the matcher won — in which case cancel() waits for
+        the in-flight ``_finish_pair`` to publish the completion before
+        returning False, so the caller never observes a receive that is
+        neither matched nor cancelled. (The matcher removes the op from
+        the posted list under the mailbox lock but completes it *after*
+        releasing the lock; without the wait, a cancel landing in that
+        window would return False while the op still reads PENDING.)"""
         if self._transport._cancel_recv(self):
             return self._complete(Status(cancelled=True), OpState.CANCELLED)
+        # Not in the posted list: either already terminal, or popped by a
+        # matcher whose _finish_pair has not run yet. Wait it out — the
+        # matcher completes the op promptly and never blocks on us.
+        while self.state is OpState.PENDING:
+            time.sleep(1e-6)
         return False
 
 
@@ -102,7 +128,12 @@ class Transport:
         self.latency_s = latency_s
         self._boxes = [_Mailbox() for _ in range(n_ranks)]
         self._stats_lock = threading.Lock()
-        self.stats = {"sends": 0, "recvs": 0, "matches": 0, "cancelled": 0}
+        self._counters = {"sends": 0, "recvs": 0, "matches": 0,
+                          "cancelled": 0}
+        # per-tag traffic accounting: tag -> sent/received message and
+        # byte counters (bytes via _payload_nbytes), so e.g. KV-shipping
+        # bandwidth is observable per channel through stats()
+        self._tag_counters: dict = {}
         self._shutdown = threading.Event()
         self._delivery: Optional[threading.Thread] = None
         if latency_s > 0:
@@ -119,7 +150,10 @@ class Transport:
     def isend(self, source: int, dest: int, tag: int, payload: Any) -> SendOp:
         op = SendOp(self, source, dest, tag, payload)
         with self._stats_lock:
-            self.stats["sends"] += 1
+            self._counters["sends"] += 1
+            t = self._tag_counter(tag)
+            t["sent_msgs"] += 1
+            t["sent_bytes"] += op.nbytes
         if self.latency_s > 0:
             with self._dq_cv:
                 heapq.heappush(self._dq, (time.monotonic() + self.latency_s,
@@ -134,7 +168,7 @@ class Transport:
               tag: int = ANY_TAG) -> RecvOp:
         op = RecvOp(self, rank, source, tag)
         with self._stats_lock:
-            self.stats["recvs"] += 1
+            self._counters["recvs"] += 1
         box = self._boxes[rank]
         matched: Optional[SendOp] = None
         with box.lock:
@@ -193,9 +227,39 @@ class Transport:
             send._complete(Status(source=send.source, tag=send.tag,
                                   count=send.nbytes))
 
+    def _tag_counter(self, tag: int) -> dict:
+        """Per-tag counter bucket (caller holds ``_stats_lock``)."""
+        c = self._tag_counters.get(tag)
+        if c is None:
+            c = self._tag_counters[tag] = {
+                "sent_msgs": 0, "sent_bytes": 0,
+                "recvd_msgs": 0, "recvd_bytes": 0}
+        return c
+
+    def stats(self) -> dict:
+        """Snapshot of transport counters.
+
+        Top-level op counts (``sends``/``recvs``/``matches``/
+        ``cancelled``), total ``sent_bytes``/``recvd_bytes``, and a
+        ``per_tag`` map of ``{tag: {sent_msgs, sent_bytes, recvd_msgs,
+        recvd_bytes}}``. Received counters tick at match time (delivery),
+        sent counters at post time."""
+        with self._stats_lock:
+            out = dict(self._counters)
+            out["per_tag"] = {t: dict(c)
+                              for t, c in self._tag_counters.items()}
+        out["sent_bytes"] = sum(c["sent_bytes"]
+                                for c in out["per_tag"].values())
+        out["recvd_bytes"] = sum(c["recvd_bytes"]
+                                 for c in out["per_tag"].values())
+        return out
+
     def _finish_pair(self, send: SendOp, recv: RecvOp) -> None:
         with self._stats_lock:
-            self.stats["matches"] += 1
+            self._counters["matches"] += 1
+            t = self._tag_counter(send.tag)
+            t["recvd_msgs"] += 1
+            t["recvd_bytes"] += send.nbytes
         recv._complete(Status(source=send.source, tag=send.tag,
                               payload=send.payload, count=send.nbytes))
         send._complete(Status(source=send.source, tag=send.tag,
@@ -209,7 +273,7 @@ class Transport:
             except ValueError:
                 return False
         with self._stats_lock:
-            self.stats["cancelled"] += 1
+            self._counters["cancelled"] += 1
         return True
 
     def _delivery_loop(self) -> None:

@@ -31,10 +31,17 @@ Layers:
   ``ServeClient`` / ``Session`` / ``TokenStream`` (sync + asyncio
   per-token iteration driven by the same continuations; no polling
   thread).
+* ``serve.disagg``  — disaggregated prefill/decode: role-based engines
+  (``PrefillWorker`` / ``DecodeWorker``) connected only by the
+  continuation transport, KV pages shipped per-block as chunked prefill
+  produces them, with the ``DisaggServer`` router exposing the same
+  serving surface (so token streams run over it unchanged).
 """
 from repro.serve.api import ServeClient, Session, TokenStream
 from repro.serve.batcher import Batcher
 from repro.serve.config import DeadlineExceeded, GenerationConfig
+from repro.serve.disagg import (DecodeWorker, DisaggServer, KVBlockMsg,
+                                PrefillWorker, serve_requests_disagg)
 from repro.serve.drafter import Drafter, NgramDrafter, RepeatDrafter
 from repro.serve.engine import ServeEngine, serve_requests
 from repro.serve.kv_cache import PagePool, paged_supported, pages_for
@@ -52,5 +59,6 @@ __all__ = [
     "make_paged_decode_step", "make_paged_suffix_step",
     "make_paged_verify_step", "make_prefill_scatter", "Drafter",
     "NgramDrafter", "RepeatDrafter", "GenerationConfig", "DeadlineExceeded",
-    "ServeClient", "Session", "TokenStream",
+    "ServeClient", "Session", "TokenStream", "DisaggServer", "PrefillWorker",
+    "DecodeWorker", "KVBlockMsg", "serve_requests_disagg",
 ]

@@ -27,7 +27,7 @@ import heapq
 import itertools
 import threading
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 from repro.core.completable import Completable
 from repro.core.engine import Engine
@@ -44,10 +44,20 @@ class _SubmitOp(Completable):
 
 
 class Batcher:
-    """Thread-safe request intake feeding a single decode loop."""
+    """Thread-safe request intake feeding a single decode loop.
 
-    def __init__(self, engine: Engine) -> None:
+    ``on_drop``: optional callback invoked (loop thread, from ``admit``)
+    for every queued request refused without being handed out — cancelled
+    while queued, or expired past its deadline. Role engines that attach
+    resources *before* admission (the disaggregated decode role queues
+    requests whose KV pages already landed) use it to release them; the
+    plain colocated intake queues nothing resource-bearing and leaves it
+    unset."""
+
+    def __init__(self, engine: Engine,
+                 on_drop: Optional[Callable[[Request], None]] = None) -> None:
         self.engine = engine
+        self._on_drop = on_drop
         # CR-level defaults (new-style keys; every admission wants both):
         # individual registrations could override via flags=, but intake
         # is deliberately uniform
@@ -119,12 +129,16 @@ class Batcher:
             _, _, req = heapq.heappop(self._pending)
             if req.req_state is RequestState.CANCELLED:
                 self.stats["dropped_cancelled"] += 1
+                if self._on_drop is not None:
+                    self._on_drop(req)
                 continue
             if req.past_deadline(now):
                 # refuse: the deadline passed while the request queued —
                 # expire it here instead of spending prefill on it
                 req.expire()
                 self.stats["expired_queued"] += 1
+                if self._on_drop is not None:
+                    self._on_drop(req)
                 continue
             req.on_admitted()
             out.append(req)

@@ -1,0 +1,909 @@
+"""Disaggregated prefill/decode serving over the continuation transport.
+
+The paper's claim — completion callbacks let a runtime overlap
+communication with computation instead of blocking at phase boundaries —
+applied to the serving stack's biggest phase boundary: prefill vs
+decode. Instead of one colocated ``ServeEngine`` doing both, two *roles*
+run against one continuation engine and talk **only** through
+``core.transport`` ops (never shared references), so a mesh/multi-host
+backend can replace the in-process transport without touching either
+role:
+
+* ``PrefillWorker`` (rank 0) — admits routed requests into its own
+  staging ``PagePool``, runs *chunked* prefill (one fused paged-suffix
+  step per ``chunk_pages`` window), and ships each finished KV page to
+  the decode role the moment the page's export slices complete — a
+  continuation on the export ``ArrayOp`` issues the ``Transport.isend``,
+  so shipping overlaps the remaining prefill chunks per-block, with no
+  barrier at end-of-prompt. The worker's staging pages are released by a
+  ``when_all`` continuation over the block sends (delivery-complete =
+  safe to recycle), which is the "prefill pages released after ship"
+  half of the leak contract.
+* ``DecodeWorker`` (rank 1) — a ``ServeEngine`` whose admission path is
+  remote ingestion instead of local prefill: a standing control receive
+  accepts per-request headers (allocate the full decode footprint,
+  post one block receive per shipped page), each block receive's
+  delivery continuation installs the page into the decode ``PagePool``
+  (``import_page``), and once the last block lands *and* the prefill
+  role has delivered the first token, the request queues for a decode
+  slot through a priority ``Batcher`` and is seated via the shared
+  ``ServeEngine._seat_slot``. Decode pages release at retirement through
+  the unchanged slot machinery — the other half of the leak contract.
+* ``DisaggServer`` — the router/facade: one intake ``Batcher`` admits in
+  QoS order and hands each request to the prefill role (control-plane
+  only: both roles hold the same ``Request`` object for delivery and
+  lifecycle, but **KV state** crosses the boundary exclusively as typed
+  transport messages). The facade exposes the ``ServeEngine`` surface
+  (``submit`` / ``step`` / ``run`` / ``metrics`` / ``idle`` /
+  ``shutdown``), so ``serve.api.ServeClient`` token streams run over it
+  unchanged.
+
+Wire protocol (all messages typed; ``_payload_nbytes`` accounts block
+payloads at their real size, so ``Transport.stats()`` shows shipping
+bandwidth per tag):
+
+* ``CTRL_TAG``: ``PrefillHeader`` (request announced; decode allocates
+  its footprint and posts block receives) → ``PrefillDone`` (first
+  token; seat when all blocks installed) *or* ``PrefillAbort`` (request
+  ended at the prefill role — cancel/deadline/stop/budget-of-one;
+  decode cancels outstanding block receives and releases pages —
+  ``RecvOp.cancel``'s atomic complete-or-cancel keeps the teardown
+  race-free).
+* ``block_tag(req_id)``: one ``KVBlockMsg`` per prompt page, in page
+  order (transport non-overtaking per tag), each installed by its own
+  delivery continuation.
+
+Token identity: the decode role runs the very same fused paged steps as
+the colocated engine, and chunked prefill appends the same KV the
+colocated suffix path would — so disaggregated token streams are
+identical to colocated ones on the same traffic (asserted in
+``tests/serve/test_disagg.py``, including speculative and
+prefix-cache-hit traffic). The prefill role deliberately keeps no prefix
+cache of its own (staging pages are recycled right after shipping);
+cross-request prefix reuse on the prefill side is future work riding the
+router's affinity hooks.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ArrayOp, ContinueFlags, Engine, OpState, Scheduler,
+                        Transport, when_all)
+from repro.models.common import ModelConfig
+from repro.serve.batcher import Batcher
+from repro.serve.drafter import Drafter
+from repro.serve.engine import ServeEngine, _step_flags
+from repro.serve.kv_cache import paged_supported, pages_for, PagePool
+from repro.serve.request import Request, RequestState, summarize
+from repro.serve.steps import make_fused_paged_suffix_step
+
+PREFILL_RANK = 0
+DECODE_RANK = 1
+
+# control-plane channel (headers / done / abort); data-plane channels are
+# per-request so per-tag transport stats separate KV bandwidth from
+# control chatter
+CTRL_TAG = 7001
+_BLOCK_TAG_BASE = 1 << 16
+
+_FLAGS = ContinueFlags(enqueue_complete=True)
+
+
+def block_tag(req_id: int) -> int:
+    """Per-request KV-block channel tag."""
+    return _BLOCK_TAG_BASE + req_id
+
+
+# --------------------------------------------------------------- messages
+@dataclass(frozen=True)
+class PrefillHeader:
+    """Announces a request to the decode role: allocate the footprint
+    for ``plen + max_new`` tokens and post ``n_ship`` block receives."""
+    req_id: int
+    plen: int
+    max_new: int
+    n_ship: int
+
+
+@dataclass(frozen=True)
+class PrefillDone:
+    """Prefill finished; ``first_token`` was already delivered to the
+    request at the prefill role (TTFT does not wait for seating)."""
+    req_id: int
+    first_token: int
+
+
+@dataclass(frozen=True)
+class PrefillAbort:
+    """The request ended at the prefill role (cancel, deadline, stop
+    sequence or single-token budget). ``shipped`` blocks were (or are
+    being) sent; the decode role drains/cancels accordingly."""
+    req_id: int
+    shipped: int
+
+
+@dataclass(frozen=True)
+class KVBlockMsg:
+    """One shipped KV page: ``k``/``v`` device arrays of shape
+    ``(n_layers, page_size, kv_heads, head_dim)``. ``nbytes`` lets the
+    transport account the payload at its real wire size (eager vs
+    rendezvous, per-tag byte counters)."""
+    req_id: int
+    index: int
+    k: Any
+    v: Any
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.k.nbytes) + int(self.v.nbytes)
+
+
+# ---------------------------------------------------------- prefill role
+class _PrefillJob:
+    """Host bookkeeping for one request moving through chunked prefill."""
+
+    __slots__ = ("req", "prompt", "plen", "n_ship", "ship", "table", "pos",
+                 "exported", "shipped", "exports_pending", "sends",
+                 "chunk_inflight", "first_arr", "done", "aborted",
+                 "released")
+
+    def __init__(self, req: Request, prompt: np.ndarray, n_ship: int,
+                 table: List[int], ship: bool) -> None:
+        self.req = req
+        self.prompt = prompt
+        self.plen = int(prompt.shape[0])
+        self.n_ship = n_ship
+        self.ship = ship                  # False: budget of 1, nothing ships
+        self.table = table
+        self.pos = 0                      # prompt tokens prefilled so far
+        self.exported = 0                 # pages whose export is dispatched
+        self.shipped = 0                  # block sends issued
+        self.exports_pending = 0
+        self.sends: List[Any] = []
+        self.chunk_inflight = False
+        self.first_arr: Optional[jax.Array] = None
+        self.done = False                 # all chunks computed
+        self.aborted = False
+        self.released = False
+
+
+class PrefillWorker:
+    """The prefill role: chunked prompt prefill + per-block KV shipping.
+
+    Owns a small staging ``PagePool`` sized for in-flight prompts only;
+    pages recycle as soon as a request's block sends complete, so the
+    staging pool never grows with decode residency. Driven by the same
+    loop thread as the decode role (single-consumer, like
+    ``ServeEngine``); all callbacks here are continuations running on
+    that thread.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, engine: Engine,
+                 transport: Transport, rank: int, peer: int,
+                 page_size: int, total_pages: int, max_prompt_len: int,
+                 chunk_pages: int = 1, max_jobs: int = 2,
+                 events: Optional[List[tuple]] = None) -> None:
+        if not paged_supported(cfg):
+            raise ValueError("disaggregated prefill requires a "
+                             "paged-cache-capable model config")
+        self.cfg = cfg
+        self.params = params
+        self.engine = engine
+        self.transport = transport
+        self.rank, self.peer = rank, peer
+        self.page_size = int(page_size)
+        self.max_jobs = max(1, int(max_jobs))
+        self.pool = PagePool(cfg, total_pages, page_size)
+        self._table_pages = pages_for(max_prompt_len, page_size)
+        self._window = max(1, int(chunk_pages)) * self.page_size
+        self._suffix_fn = jax.jit(
+            make_fused_paged_suffix_step(cfg, self.page_size),
+            donate_argnums=(1,))
+        self.cr = engine.continue_init()
+        self._jobs: Dict[int, _PrefillJob] = {}
+        self._queue: Deque[Request] = deque()   # routed, waiting for pages
+        self._events = events
+        self._retired: List[Request] = []
+        self._lock = threading.Lock()
+        self.bytes_shipped = 0
+        self.stats = {"jobs": 0, "chunks": 0, "blocks_shipped": 0,
+                      "blocks_dropped": 0, "retired": 0, "stopped": 0,
+                      "cancelled": 0, "expired": 0, "aborted": 0,
+                      "deferred": 0}
+
+    # ------------------------------------------------------------- intake
+    @property
+    def capacity(self) -> int:
+        """How many more requests the router should hand over now."""
+        return max(0, self.max_jobs - len(self._jobs) - len(self._queue))
+
+    def start(self, req: Request) -> None:
+        """Accept a routed request (may wait for staging pages)."""
+        self._queue.append(req)
+
+    def _activate(self) -> int:
+        started = 0
+        while self._queue and len(self._jobs) < self.max_jobs:
+            req = self._queue[0]
+            if req.req_state is RequestState.CANCELLED:
+                self._queue.popleft()
+                self.stats["cancelled"] += 1
+                self._unannounce(req)
+                continue
+            if req.past_deadline():
+                self._queue.popleft()
+                if req.expire():
+                    self.stats["expired"] += 1
+                self._unannounce(req)
+                continue
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            n_ship = pages_for(prompt.shape[0], self.page_size)
+            table = self.pool.alloc(n_ship)
+            if table is None:
+                self.stats["deferred"] += 1
+                break
+            self._queue.popleft()
+            ship = req.max_new_tokens > 1
+            job = _PrefillJob(req, prompt, n_ship, table, ship)
+            self._jobs[req.req_id] = job
+            self.stats["jobs"] += 1
+            if ship:
+                # announce before any chunk runs: the decode role posts
+                # its block receives ahead of the first send
+                self.transport.isend(self.rank, self.peer, CTRL_TAG,
+                                     PrefillHeader(req.req_id, job.plen,
+                                                   req.max_new_tokens,
+                                                   n_ship))
+                self._log("header", req.req_id)
+            started += 1
+        return started
+
+    def _unannounce(self, req: Request) -> None:
+        """A routed request died before prefill even started: the decode
+        role may be expecting it — a zero-shipped abort clears that."""
+        if req.max_new_tokens > 1:
+            self.transport.isend(self.rank, self.peer, CTRL_TAG,
+                                 PrefillAbort(req.req_id, 0))
+
+    # --------------------------------------------------------------- loop
+    def step(self) -> bool:
+        """Dispatch the next chunk of every job with no chunk in flight."""
+        progressed = bool(self._activate())
+        for job in list(self._jobs.values()):
+            if job.chunk_inflight or job.done or job.aborted:
+                continue
+            req = job.req
+            if req.req_state is RequestState.CANCELLED:
+                self.stats["cancelled"] += 1
+                self._abort(job)
+                continue
+            if req.past_deadline():
+                if req.expire():
+                    self.stats["expired"] += 1
+                self._abort(job)
+                continue
+            self._dispatch_chunk(job)
+            progressed = True
+        return progressed
+
+    def _padded_table(self, table: List[int]) -> jax.Array:
+        out = np.full(self._table_pages, self.pool.null_page, np.int32)
+        out[:len(table)] = table
+        return jnp.asarray(out)
+
+    def _dispatch_chunk(self, job: _PrefillJob) -> None:
+        self.pool.ensure_arrays()
+        W = self._window
+        start = job.pos
+        end = min(start + W, job.plen)
+        tail = end - start
+        tok = np.zeros((1, W), np.int32)
+        tok[0, :tail] = job.prompt[start:end]
+        logits, self.pool.arrays = self._suffix_fn(
+            self.params, self.pool.arrays, jnp.asarray(tok),
+            jnp.asarray([start], jnp.int32),
+            self._padded_table(job.table)[None],
+            jnp.asarray([tail], jnp.int32))
+        job.chunk_inflight = True
+        self.stats["chunks"] += 1
+        last = end == job.plen
+        if last:
+            job.first_arr = jnp.argmax(logits[:, tail - 1],
+                                       axis=-1).astype(jnp.int32)
+            op = ArrayOp(job.first_arr)
+        else:
+            op = ArrayOp(logits)
+        self.engine.continue_when(op, self._on_chunk, (job, end),
+                                  cr=self.cr,
+                                  flags=_step_flags(job.req.priority))
+
+    def _on_chunk(self, statuses, meta) -> None:
+        job, end = meta
+        job.chunk_inflight = False
+        job.pos = end
+        req = job.req
+        if job.aborted:
+            return
+        if req.req_state is RequestState.CANCELLED:
+            self.stats["cancelled"] += 1
+            self._abort(job)
+            return
+        if req.past_deadline() and end < job.plen:
+            # mid-prompt expiry: nothing delivered yet, fail cheaply (a
+            # finished prompt falls through — the paid-for first token is
+            # still returned, mirroring the colocated engine)
+            if req.expire():
+                self.stats["expired"] += 1
+            self._abort(job)
+            return
+        done = end == job.plen
+        # export every page this chunk completed (the partial tail page
+        # counts once the whole prompt is in); each export's completion
+        # continuation ships the block — communication overlaps the
+        # remaining chunks per-block
+        if job.ship:
+            n_complete = job.n_ship if done else end // self.page_size
+            for idx in range(job.exported, n_complete):
+                kv = self.pool.export_page(job.table[idx])
+                job.exports_pending += 1
+                self.engine.continue_when(ArrayOp(kv), self._on_export,
+                                          (job, idx, kv), cr=self.cr,
+                                          flags=_FLAGS)
+            job.exported = n_complete
+        if not done:
+            return
+        job.done = True
+        self._log("prefill_done", req.req_id)
+        first = int(np.asarray(job.first_arr)[0])
+        req.push_device_token(first)
+        req.on_first_token()
+        finished = req.deliver([first])
+        if finished == "stop":
+            self._retire(req, stopped=True)
+            self._abort(job)
+        elif req.remaining == 0:
+            # budget of one: answered entirely at the prefill role — the
+            # decode role was never involved (no header was sent)
+            self._retire(req)
+            self._abort(job, notify=job.ship)
+        elif req.past_deadline():
+            if req.expire():
+                self.stats["expired"] += 1
+            self._abort(job)
+        else:
+            self.transport.isend(self.rank, self.peer, CTRL_TAG,
+                                 PrefillDone(req.req_id, first))
+            self._maybe_finalize(job)
+
+    def _on_export(self, statuses, meta) -> None:
+        job, idx, kv = meta
+        job.exports_pending -= 1
+        if job.aborted:
+            self.stats["blocks_dropped"] += 1
+            self._maybe_finalize(job)
+            return
+        msg = KVBlockMsg(job.req.req_id, idx, kv["k"], kv["v"])
+        op = self.transport.isend(self.rank, self.peer,
+                                  block_tag(job.req.req_id), msg)
+        job.sends.append(op)
+        job.shipped += 1
+        self.bytes_shipped += msg.nbytes
+        self.stats["blocks_shipped"] += 1
+        self._log("ship", job.req.req_id, idx)
+        self._maybe_finalize(job)
+
+    # ----------------------------------------------------------- teardown
+    def _abort(self, job: _PrefillJob, notify: bool = True) -> None:
+        """Stop shipping for a job (terminal at this role). ``notify``
+        tells the decode role to tear its landing down — skipped only
+        when no header was ever sent."""
+        if job.aborted:
+            return
+        job.aborted = True
+        self.stats["aborted"] += 1
+        if notify and job.ship:
+            self.transport.isend(self.rank, self.peer, CTRL_TAG,
+                                 PrefillAbort(job.req.req_id, job.shipped))
+            self._log("abort", job.req.req_id)
+        self._maybe_finalize(job)
+
+    def _maybe_finalize(self, job: _PrefillJob) -> None:
+        """Once every dispatched export has either shipped or been
+        dropped, release the staging pages when ALL block sends complete
+        (delivery done — ``when_all([])`` is vacuous for unshipped
+        jobs)."""
+        if job.released or job.exports_pending:
+            return
+        if not (job.done or job.aborted):
+            return
+        job.released = True
+        self.engine.continue_when(when_all(job.sends),
+                                  self._on_ships_complete, job,
+                                  cr=self.cr, flags=_FLAGS)
+
+    def _on_ships_complete(self, statuses, job: _PrefillJob) -> None:
+        self.pool.release(job.table)
+        job.table = []
+        self._jobs.pop(job.req.req_id, None)
+        self._log("prefill_released", job.req.req_id)
+
+    def _retire(self, req: Request, stopped: bool = False) -> None:
+        if not req.retire():
+            if req.req_state is RequestState.CANCELLED:
+                self.stats["cancelled"] += 1
+            return
+        if stopped:
+            self.stats["stopped"] += 1
+        with self._lock:
+            self._retired.append(req)
+        self.stats["retired"] += 1
+
+    # ------------------------------------------------------------- surface
+    @property
+    def retired(self) -> List[Request]:
+        """Requests that finished entirely at the prefill role."""
+        with self._lock:
+            return list(self._retired)
+
+    @property
+    def idle(self) -> bool:
+        return (not self._jobs and not self._queue
+                and self.cr.active_count == 0)
+
+    def metrics(self) -> dict:
+        out = dict(self.stats)
+        out["bytes_shipped"] = self.bytes_shipped
+        out.update({f"pool_{k}": v for k, v in self.pool.metrics().items()})
+        return out
+
+    def _log(self, kind: str, req_id: int, *rest: Any) -> None:
+        if self._events is not None:
+            self._events.append((kind, req_id) + rest)
+
+
+# ----------------------------------------------------------- decode role
+class _Landing:
+    """One request's blocks-in-flight state on the decode side."""
+
+    __slots__ = ("req", "plen", "n_ship", "first", "installed", "resolved",
+                 "recvs", "active", "aborted", "queued")
+
+    def __init__(self, req: Request, plen: int, n_ship: int) -> None:
+        self.req = req
+        self.plen = plen
+        self.n_ship = n_ship
+        self.first: Optional[int] = None   # set by PrefillDone
+        self.installed = 0                 # blocks written into the pool
+        self.resolved = 0                  # block receives completed/cancelled
+        self.recvs: List[Any] = []
+        self.active = False                # footprint allocated, recvs posted
+        self.aborted = False
+        self.queued = False                # handed to the seat batcher
+
+
+class DecodeWorker(ServeEngine):
+    """A ``ServeEngine`` whose admission path is remote KV ingestion.
+
+    Local prefill never runs here: requests arrive as a ``PrefillHeader``
+    on the control channel, their KV pages land via per-block delivery
+    continuations (``PagePool.import_page``), and seating goes through
+    ``_seat_slot`` — the same slot/step/retirement machinery as the
+    colocated engine, so decode behavior (and tokens) are identical.
+
+    The seat queue is a second ``Batcher``: landed requests admit into
+    free slots in QoS order with past-deadline refusal, and its
+    ``on_drop`` hook releases the already-landed pages of requests
+    cancelled or expired while waiting — role-aware admission with the
+    same component the router uses at intake.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *,
+                 transport: Transport, rank: int, peer: int,
+                 events: Optional[List[tuple]] = None,
+                 **engine_kwargs: Any) -> None:
+        engine_kwargs.setdefault("paged", True)
+        super().__init__(cfg, params, **engine_kwargs)
+        if not self.paged:
+            raise ValueError("DecodeWorker requires paged mode")
+        self.transport = transport
+        self.rank, self.peer = rank, peer
+        self._events = events
+        # standing control receive rides its own CR so its permanent
+        # registration never blocks idle detection; block receives ride
+        # cr_ingest and drain to zero with their landings
+        self.cr_ctrl = self.engine.continue_init()
+        self.cr_ingest = self.engine.continue_init()
+        self._expected: Dict[int, Request] = {}
+        self._landings: Dict[int, _Landing] = {}
+        self._pending_landings: Deque[_Landing] = deque()
+        self.seat_batcher = Batcher(self.engine, on_drop=self._drop_landed)
+        self.ingest_stats = {"headers": 0, "blocks_installed": 0,
+                             "blocks_discarded": 0, "blocks_drained": 0,
+                             "remote_seated": 0, "aborts": 0,
+                             "landings_deferred": 0}
+        self._ctrl_op: Optional[Any] = None
+        self._post_ctrl_recv()
+
+    # ------------------------------------------------------------- intake
+    def submit(self, request: Request) -> Request:
+        raise RuntimeError(
+            "the decode role receives work via transport ingestion; "
+            "submit through the DisaggServer router")
+
+    def expect(self, req: Request) -> None:
+        """Control-plane registration: the router names the ``Request``
+        object a forthcoming header refers to (the transport itself only
+        ever carries ids and KV blocks)."""
+        self._expected[req.req_id] = req
+
+    # ----------------------------------------------------- control channel
+    def _post_ctrl_recv(self) -> None:
+        op = self.transport.irecv(self.rank, source=self.peer, tag=CTRL_TAG)
+        self._ctrl_op = op
+        self.engine.continue_when(op, self._on_ctrl, op, cr=self.cr_ctrl,
+                                  flags=_FLAGS)
+
+    def _on_ctrl(self, statuses, op) -> None:
+        if op.state is OpState.CANCELLED:
+            return                      # shutdown: don't re-arm
+        msg = op.status.payload
+        self._post_ctrl_recv()          # re-arm before processing
+        if isinstance(msg, PrefillHeader):
+            self._on_header(msg)
+        elif isinstance(msg, PrefillDone):
+            landing = self._landings.get(msg.req_id)
+            if landing is not None:
+                landing.first = int(msg.first_token)
+                self._advance_landing(landing)
+        elif isinstance(msg, PrefillAbort):
+            self._on_abort(msg)
+
+    def _on_header(self, msg: PrefillHeader) -> None:
+        req = self._expected.pop(msg.req_id, None)
+        if req is None:                 # router never announced it
+            raise RuntimeError(f"header for unknown request {msg.req_id}")
+        self.ingest_stats["headers"] += 1
+        landing = _Landing(req, msg.plen, msg.n_ship)
+        self._landings[msg.req_id] = landing
+        if not self._try_activate(landing):
+            self.ingest_stats["landings_deferred"] += 1
+            self._pending_landings.append(landing)
+
+    def _try_activate(self, landing: _Landing) -> bool:
+        """Allocate the request's full decode footprint and post its
+        block receives. False = pool can't cover it yet (backpressure:
+        rendezvous block sends simply wait unmatched)."""
+        req = landing.req
+        n_pages = pages_for(landing.plen + req.max_new_tokens,
+                            self.page_size)
+        table = self.pool.alloc(n_pages)
+        if table is None:
+            return False
+        req.page_ids = table
+        landing.active = True
+        self._ensure_state()
+        for _ in range(landing.n_ship):
+            rop = self.transport.irecv(self.rank, source=self.peer,
+                                       tag=block_tag(req.req_id))
+            landing.recvs.append(rop)
+            self.engine.continue_when(rop, self._on_block, (landing, rop),
+                                      cr=self.cr_ingest, flags=_FLAGS)
+        return True
+
+    # ------------------------------------------------------ block landing
+    def _on_block(self, statuses, meta) -> None:
+        landing, rop = meta
+        landing.resolved += 1
+        if rop.state is not OpState.CANCELLED:
+            msg = rop.status.payload
+            req = landing.req
+            if landing.aborted or req.is_terminal:
+                self.ingest_stats["blocks_discarded"] += 1
+            else:
+                self.pool.import_page(req.page_ids[msg.index],
+                                      {"k": msg.k, "v": msg.v})
+                landing.installed += 1
+                self.ingest_stats["blocks_installed"] += 1
+                self._log("install", msg.req_id, msg.index)
+        self._advance_landing(landing)
+
+    def _advance_landing(self, landing: _Landing) -> None:
+        req = landing.req
+        if landing.queued:
+            return                      # seat queue / slot machinery owns it
+        if landing.aborted or req.is_terminal:
+            # teardown completes once every posted receive resolved
+            # (matched-and-discarded or cancelled)
+            if landing.resolved == len(landing.recvs):
+                self._release_pages(req)
+                self._landings.pop(req.req_id, None)
+            return
+        if landing.first is not None and landing.installed == landing.n_ship:
+            landing.queued = True
+            # full prompt pages join the decode-side prefix index, so
+            # future colocated-style affinity/reuse can find them
+            self.pool.register_prefix(req.prompt, req.page_ids)
+            self.seat_batcher.submit(req)
+            self._log("landed", req.req_id)
+
+    def _on_abort(self, msg: PrefillAbort) -> None:
+        self.ingest_stats["aborts"] += 1
+        # the request may have died before its header was ever sent
+        self._expected.pop(msg.req_id, None)
+        landing = self._landings.get(msg.req_id)
+        if landing is None:
+            return
+        if landing.queued:
+            return                      # done+abort never both arrive
+        landing.aborted = True
+        if not landing.active:
+            # never allocated: just drain the blocks already in flight so
+            # their (rendezvous) sends complete and nothing lingers in
+            # the unexpected queue
+            try:
+                self._pending_landings.remove(landing)
+            except ValueError:
+                pass
+            self._landings.pop(msg.req_id, None)
+            for _ in range(msg.shipped):
+                rop = self.transport.irecv(self.rank, source=self.peer,
+                                           tag=block_tag(msg.req_id))
+                self.engine.continue_when(rop, self._on_drain, rop,
+                                          cr=self.cr_ingest, flags=_FLAGS)
+            return
+        # cancel still-posted receives; ones concurrently matching resolve
+        # through _on_block (RecvOp.cancel is atomic complete-or-cancel)
+        for rop in landing.recvs:
+            if rop.state is OpState.PENDING:
+                rop.cancel()
+        self._advance_landing(landing)
+
+    def _on_drain(self, statuses, rop) -> None:
+        self.ingest_stats["blocks_drained"] += 1
+
+    def _drop_landed(self, req: Request) -> None:
+        """Seat-batcher ``on_drop``: a landed request was refused
+        (cancelled or past-deadline while queued for a slot) — its pages
+        are already allocated and must release here."""
+        self._landings.pop(req.req_id, None)
+        self._release_pages(req)
+
+    # ------------------------------------------------------------ seating
+    def _admit(self) -> int:
+        # deferred landings first: pages freed by retirements may now
+        # cover them (FIFO — the prefill role already ordered admission)
+        while self._pending_landings:
+            landing = self._pending_landings[0]
+            if landing.req.is_terminal:
+                self._pending_landings.popleft()
+                self._landings.pop(landing.req.req_id, None)
+                continue
+            if not self._try_activate(landing):
+                break
+            self._pending_landings.popleft()
+        free = self._free_slots()
+        if not free:
+            return 0
+        admitted = 0
+        for req in self.seat_batcher.admit(len(free)):
+            landing = self._landings.pop(req.req_id, None)
+            if landing is None:
+                continue
+            self._ensure_state()
+            ctx = None
+            if self.speculate:
+                ctx = [int(t) for t in
+                       np.asarray(req.prompt, np.int32).reshape(-1)]
+                ctx.append(landing.first)
+            self._seat_slot(free.pop(0), req, jnp.int32(landing.first),
+                            landing.plen, ctx=ctx)
+            self.ingest_stats["remote_seated"] += 1
+            self._log("seat", req.req_id)
+            admitted += 1
+        return admitted
+
+    # ------------------------------------------------------------- surface
+    @property
+    def idle(self) -> bool:
+        return (super().idle
+                and not self._landings and not self._pending_landings
+                and self.seat_batcher.queued == 0
+                and self.seat_batcher.cr.active_count == 0
+                and self.cr_ingest.active_count == 0)
+
+    def shutdown_ingest(self) -> None:
+        """Cancel the standing control receive (facade shutdown)."""
+        if self._ctrl_op is not None:
+            self._ctrl_op.cancel()
+
+    def metrics(self) -> dict:
+        out = super().metrics()
+        out.update(self.ingest_stats)
+        return out
+
+    def _log(self, kind: str, req_id: int, *rest: Any) -> None:
+        if self._events is not None:
+            self._events.append((kind, req_id) + rest)
+
+
+# --------------------------------------------------------------- facade
+class DisaggServer:
+    """Router + facade over a prefill role and a decode role connected by
+    an in-process ``Transport`` (2 ranks, one shared continuation
+    engine, one driver thread).
+
+    Exposes the ``ServeEngine`` surface — ``submit`` / ``step`` /
+    ``run`` / ``close_intake`` / ``idle`` / ``metrics`` / ``retired`` /
+    ``shutdown`` plus a ``batcher`` attribute — so ``ServeClient`` and
+    the token-stream API work over it unchanged. ``events`` records the
+    handoff lifecycle (``header``/``ship``/``install``/``prefill_done``/
+    ``landed``/``seat``/``abort``/``prefill_released``) in driver-thread
+    order; tests assert per-block pipelining on it.
+
+    Construction knobs beyond ``ServeEngine``'s: ``chunk_pages`` (prompt
+    pages per prefill chunk — smaller chunks ship earlier), ``
+    prefill_pages`` (staging pool size, default twice one max request),
+    ``prefill_jobs`` (concurrent prompts at the prefill role), and the
+    transport's ``latency_s`` / ``eager_threshold`` for experiments.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *,
+                 max_batch: int = 4,
+                 max_cache_len: int = 256,
+                 max_inflight: int = 2,
+                 engine: Optional[Engine] = None,
+                 scheduler: Union[str, Scheduler] = "fifo",
+                 page_size: int = 16,
+                 total_pages: Optional[int] = None,
+                 max_seq_len: Optional[int] = None,
+                 speculate: int = 0,
+                 drafter: Optional[Drafter] = None,
+                 fused: Optional[bool] = None,
+                 chunk_pages: int = 1,
+                 prefill_pages: Optional[int] = None,
+                 prefill_jobs: int = 2,
+                 latency_s: float = 0.0,
+                 eager_threshold: int = 4096) -> None:
+        if not paged_supported(cfg):
+            raise ValueError("disaggregated serving requires a "
+                             "paged-cache-capable model config")
+        self._own_engine = engine is None
+        self.engine = engine if engine is not None else \
+            Engine(scheduler=scheduler)
+        self.transport = Transport(2, engine=self.engine,
+                                   latency_s=latency_s,
+                                   eager_threshold=eager_threshold)
+        self.events: List[tuple] = []
+        self.decode = DecodeWorker(
+            cfg, params, transport=self.transport, rank=DECODE_RANK,
+            peer=PREFILL_RANK, events=self.events, engine=self.engine,
+            max_batch=max_batch, max_cache_len=max_cache_len,
+            max_inflight=max_inflight, paged=True, page_size=page_size,
+            total_pages=total_pages, max_seq_len=max_seq_len,
+            speculate=speculate, drafter=drafter, fused=fused)
+        if prefill_pages is None:
+            prefill_pages = 2 * pages_for(self.decode.max_seq_len,
+                                          page_size)
+        self.prefill = PrefillWorker(
+            cfg, params, engine=self.engine, transport=self.transport,
+            rank=PREFILL_RANK, peer=DECODE_RANK, page_size=page_size,
+            total_pages=prefill_pages,
+            max_prompt_len=self.decode.max_seq_len,
+            chunk_pages=chunk_pages, max_jobs=prefill_jobs,
+            events=self.events)
+        self.batcher = Batcher(self.engine)      # router intake
+
+    # ------------------------------------------------------------- clients
+    def submit(self, request: Request) -> Request:
+        plen = int(np.asarray(request.prompt).reshape(-1).shape[0])
+        total = plen + request.max_new_tokens
+        if total > self.decode.max_seq_len:
+            raise ValueError(f"request needs {total} tokens > max_seq_len="
+                             f"{self.decode.max_seq_len}")
+        if pages_for(total, self.decode.page_size) \
+                > self.decode.pool.total_pages:
+            raise ValueError("request needs more pages than the decode "
+                             f"pool holds ({self.decode.pool.total_pages})")
+        if pages_for(plen, self.prefill.page_size) \
+                > self.prefill.pool.total_pages:
+            raise ValueError("prompt needs more pages than the prefill "
+                             f"pool holds ({self.prefill.pool.total_pages})")
+        return self.batcher.submit(request)
+
+    def close_intake(self) -> None:
+        self.batcher.close()
+
+    @property
+    def retired(self) -> List[Request]:
+        return self.decode.retired + self.prefill.retired
+
+    # ----------------------------------------------------------------- loop
+    def _route(self) -> int:
+        """Admit intake in QoS order and hand requests to the prefill
+        role; the decode role is told to expect each one first (the
+        header may race ahead on the control channel otherwise)."""
+        reqs = self.batcher.admit(self.prefill.capacity)
+        for req in reqs:
+            if req.max_new_tokens > 1:
+                self.decode.expect(req)
+            self.prefill.start(req)
+        return len(reqs)
+
+    def step(self) -> bool:
+        routed = self._route()
+        prefilled = self.prefill.step()
+        decoded = self.decode.step()     # also ticks the shared engine
+        return bool(routed) or prefilled or decoded
+
+    @property
+    def idle(self) -> bool:
+        return (not self._pending_intake() and self.prefill.idle
+                and self.decode.idle)
+
+    def _pending_intake(self) -> bool:
+        return bool(self.batcher.queued or self.batcher.cr.active_count)
+
+    def run(self, timeout: Optional[float] = None,
+            idle_sleep: float = 5e-5, until=None) -> List[Request]:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        done = until if until is not None else \
+            (lambda: self.batcher.closed and self.idle)
+        while not done():
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(
+                    "disagg serve loop timed out: "
+                    f"queued={self.batcher.queued} "
+                    f"prefill_jobs={len(self.prefill._jobs)} "
+                    f"landings={len(self.decode._landings)} "
+                    f"active={self.decode.active}")
+            if not self.step():
+                time.sleep(idle_sleep)
+        return self.retired
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> dict:
+        out = summarize(self.retired)
+        out["disaggregated"] = True
+        out["decode"] = self.decode.metrics()
+        out["prefill"] = self.prefill.metrics()
+        out["transport"] = self.transport.stats()
+        shipped = self.prefill.stats["blocks_shipped"]
+        jobs = self.prefill.stats["jobs"]
+        out["blocks_shipped"] = shipped
+        out["bytes_shipped"] = self.prefill.bytes_shipped
+        out["bytes_shipped_per_request"] = \
+            self.prefill.bytes_shipped / jobs if jobs else 0.0
+        return out
+
+    def shutdown(self) -> None:
+        self.batcher.close()
+        self.decode.shutdown_ingest()
+        self.decode.shutdown()           # closes its (unused) intake
+        self.transport.shutdown()
+        if self._own_engine:
+            self.engine.shutdown()
+
+
+def serve_requests_disagg(cfg: ModelConfig, params: Any,
+                          requests: List[Request], *,
+                          timeout: float = 300.0,
+                          **kwargs: Any) -> List[Request]:
+    """Convenience: serve a fixed request list through a disaggregated
+    server to completion (mirror of ``serve.engine.serve_requests``)."""
+    srv = DisaggServer(cfg, params, **kwargs)
+    try:
+        for r in requests:
+            srv.submit(r)
+        srv.close_intake()
+        srv.run(timeout=timeout)
+    finally:
+        srv.shutdown()
+    return list(requests)

@@ -396,26 +396,39 @@ class ServeEngine:
         if not self.paged:
             self._cache = jax.tree_util.tree_map(
                 lambda sc, pc: sc.at[slot].set(pc), self._cache, cache1)
-        else:
-            self._tables[slot, :] = self.pool.null_page
-            self._tables[slot, :len(req.page_ids)] = req.page_ids
-            self._tables_dirty.add(slot)
         req.push_device_token(first[0])
         self.stats["prefills"] += 1
-        self._tokens = self._tokens.at[slot].set(first[:, None])
-        self._pos[slot] = plen
-        self._slots[slot] = req
+        ctx = None
         if self.speculate:
             # host context for the drafter: the prompt now; the first
             # token when its array completes (prefill continuation), and
             # every accepted run as verify continuations fire
-            self._ctx[slot] = [int(t) for t in
-                               np.asarray(req.prompt, np.int32).reshape(-1)]
+            ctx = [int(t) for t in
+                   np.asarray(req.prompt, np.int32).reshape(-1)]
+        self._seat_slot(slot, req, first[:, None], plen, ctx=ctx)
         self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
                                   (req, False, slot, first),
                                   cr=self.cr_steps,
                                   flags=_step_flags(req.priority))
         return True
+
+    def _seat_slot(self, slot: int, req: Request, token0: Any, plen: int,
+                   *, ctx: Optional[List[int]] = None) -> None:
+        """Seat an already-prefilled request into decode slot ``slot`` —
+        the role-neutral half of placement, shared by the colocated
+        prefill path (``_place``) and remote KV ingestion
+        (``serve.disagg.DecodeWorker``). ``token0`` is the request's next
+        input token: a device ``(1, 1)`` array from a local prefill, or a
+        host int delivered by a remote prefill role. ``req.page_ids``
+        must already hold the request's pages (paged mode)."""
+        if self.paged:
+            self._tables[slot, :] = self.pool.null_page
+            self._tables[slot, :len(req.page_ids)] = req.page_ids
+            self._tables_dirty.add(slot)
+        self._tokens = self._tokens.at[slot].set(token0)
+        self._pos[slot] = plen
+        self._slots[slot] = req
+        self._ctx[slot] = ctx
 
     def _prefill_paged(self, req: Request,
                        prompt: jax.Array) -> Optional[jax.Array]:

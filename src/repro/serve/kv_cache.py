@@ -33,12 +33,31 @@ the slot state it feeds); no locking is needed here.
 from __future__ import annotations
 
 import hashlib
+from functools import partial
 from typing import Any, Dict, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import DENSE, MOE, ModelConfig
+
+
+@jax.jit
+def _page_slice(arr: jax.Array, page: jax.Array) -> jax.Array:
+    """One page's KV out of a pool array: (L, P+1, ps, KV, hd) →
+    (L, ps, KV, hd). ``page`` is traced, so every page id shares one
+    compilation."""
+    return jax.lax.dynamic_index_in_dim(arr, page, axis=1, keepdims=False)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _page_install(arr: jax.Array, page: jax.Array,
+                  data: jax.Array) -> jax.Array:
+    """Install one page of KV into a (donated) pool array at a traced
+    page index — the ingestion half of remote page shipping."""
+    return jax.lax.dynamic_update_slice_in_dim(arr, data[:, None], page,
+                                               axis=1)
 
 
 def paged_supported(cfg: ModelConfig) -> bool:
@@ -81,7 +100,8 @@ class PagePool:
         self._page_key: Dict[int, bytes] = {}
         self.arrays: Optional[Dict[str, Any]] = None
         self.stats = {"allocated": 0, "released": 0, "prefix_hits": 0,
-                      "prefix_tokens_reused": 0, "peak_in_use": 0}
+                      "prefix_tokens_reused": 0, "peak_in_use": 0,
+                      "pages_exported": 0, "pages_imported": 0}
 
     # ------------------------------------------------------------- arrays
     def ensure_arrays(self) -> None:
@@ -92,6 +112,40 @@ class PagePool:
                  cfg.padded_kv_heads, cfg.resolved_head_dim)
         self.arrays = {"k": jnp.zeros(shape, cfg.dtype),
                        "v": jnp.zeros(shape, cfg.dtype)}
+
+    @property
+    def page_nbytes(self) -> int:
+        """Wire size of one exported page (all layers, k + v)."""
+        cfg = self.cfg
+        itemsize = jnp.dtype(cfg.dtype).itemsize
+        return (2 * cfg.n_layers * self.page_size * cfg.padded_kv_heads
+                * cfg.resolved_head_dim * itemsize)
+
+    # ------------------------------------------------- remote page shipping
+    def export_page(self, page: int) -> Dict[str, Any]:
+        """Copy one resident page out of the pool: ``{"k", "v"}`` device
+        arrays of shape ``(n_layers, page_size, kv_heads, head_dim)``.
+
+        The slices are fresh buffers ordered after every write already
+        dispatched against the pool (jax data dependency), so a prefill
+        role can ship them over a transport — and later release the page
+        — without synchronizing with in-flight device work."""
+        self.ensure_arrays()
+        self.stats["pages_exported"] += 1
+        page_idx = jnp.int32(page)
+        return {k: _page_slice(a, page_idx) for k, a in self.arrays.items()}
+
+    def import_page(self, page: int, data: Dict[str, Any]) -> None:
+        """Install shipped KV into an owned page (the ingestion side of
+        ``export_page``). Dispatches asynchronously; any step reading the
+        pool arrays afterwards is ordered behind the install by data
+        dependency, so callers may seat the request immediately."""
+        self.ensure_arrays()
+        page_idx = jnp.int32(page)
+        for k in self.arrays:
+            self.arrays[k] = _page_install(self.arrays[k], page_idx,
+                                           data[k])
+        self.stats["pages_imported"] += 1
 
     # ---------------------------------------------------------- free list
     @property

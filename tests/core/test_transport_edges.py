@@ -143,3 +143,95 @@ def test_eager_vs_rendezvous_threshold_boundary():
     got = [tr.irecv(1, tag=1).status.payload for _ in range(2)]
     assert got == [b"e" * 16, b"r" * 17]         # FIFO preserved
     assert rendez.done()
+
+
+# ------------------------------------- cancel vs in-flight _finish_pair
+def test_cancel_waits_out_inflight_finish_pair():
+    """Regression: the matcher pops a posted recv under the mailbox lock
+    but completes it AFTER releasing the lock. A cancel() landing in that
+    window used to return False while the op still read PENDING — the
+    caller observed a receive that was neither matched nor cancelled.
+    cancel() must block until the in-flight completion publishes."""
+    tr = Transport(2)
+    recv = tr.irecv(1, source=0, tag=11)
+
+    in_window = threading.Event()     # matcher popped recv, not completed
+    resume = threading.Event()        # let the matcher finish
+    orig_finish = Transport._finish_pair
+
+    def stalled_finish(self, send, r):
+        in_window.set()
+        assert resume.wait(5.0)
+        orig_finish(self, send, r)
+
+    tr._finish_pair = stalled_finish.__get__(tr, Transport)
+    sender = threading.Thread(target=tr.isend,
+                              args=(0, 1, 11, b"payload"))
+    sender.start()
+    assert in_window.wait(5.0)
+
+    observed = {}
+
+    def do_cancel():
+        observed["result"] = recv.cancel()
+        observed["state"] = recv.state
+
+    canceller = threading.Thread(target=do_cancel)
+    canceller.start()
+    # cancel() must be stuck: the op is out of the posted list but its
+    # completion has not published yet
+    canceller.join(timeout=0.2)
+    assert canceller.is_alive(), "cancel() returned inside the race window"
+    resume.set()
+    canceller.join(timeout=5.0)
+    sender.join(timeout=5.0)
+    assert not canceller.is_alive()
+    assert observed["result"] is False          # matcher won the race
+    assert observed["state"] is OpState.COMPLETE
+    assert recv.status.payload == b"payload"
+
+
+# ------------------------------------------------------- per-tag stats
+def test_stats_per_tag_counters():
+    tr = Transport(2, eager_threshold=8)
+    tr.isend(0, 1, 3, b"abcd")                   # eager, 4 bytes
+    tr.isend(0, 1, 3, b"efgh")
+    big = tr.isend(0, 1, 5, b"z" * 32)           # rendezvous, unmatched
+    s = tr.stats()
+    assert s["sends"] == 3 and s["recvs"] == 0
+    assert s["per_tag"][3] == {"sent_msgs": 2, "sent_bytes": 8,
+                               "recvd_msgs": 0, "recvd_bytes": 0}
+    # sent counters tick at post time even before a match
+    assert s["per_tag"][5]["sent_msgs"] == 1
+    assert s["per_tag"][5]["sent_bytes"] == 32
+    assert s["per_tag"][5]["recvd_msgs"] == 0
+    assert s["sent_bytes"] == 40 and s["recvd_bytes"] == 0
+
+    tr.irecv(1, source=0, tag=3)
+    tr.irecv(1, source=0, tag=5)
+    s = tr.stats()
+    assert big.done()
+    assert s["matches"] == 2
+    assert s["per_tag"][3]["recvd_msgs"] == 1    # one of two matched
+    assert s["per_tag"][3]["recvd_bytes"] == 4
+    assert s["per_tag"][5]["recvd_msgs"] == 1
+    assert s["recvd_bytes"] == 36
+
+
+def test_stats_payload_accounting_containers():
+    """Container payloads are accounted at their real element sizes (plus
+    framing), not the flat control-message default — typed messages with
+    an nbytes property report it directly."""
+    import numpy as np
+    tr = Transport(2, eager_threshold=64)
+    arr = np.zeros(100, np.int32)                # 400 bytes
+    s1 = tr.isend(0, 1, 1, (7, arr))             # tuple: framed sum
+    assert not s1.done()                         # > threshold: rendezvous
+    assert s1.nbytes >= 400
+
+    class Msg:
+        nbytes = 123
+    s2 = tr.isend(0, 1, 2, Msg())
+    assert s2.nbytes == 123
+    d = tr.isend(0, 1, 3, {"k": arr, "v": arr})
+    assert d.nbytes >= 800

@@ -1,0 +1,368 @@
+"""Disaggregated prefill/decode serving: token identity against the
+colocated engine (greedy, speculative, prefix-hit traffic), per-block
+KV-shipping pipelining, cancel teardown mid-prefill and mid-shipping,
+page-leak checks on BOTH role pools, transport per-tag accounting, and
+the streaming front-end running over the role-split server unchanged."""
+import time
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import (GenerationConfig, Request, RequestState,
+                         ServeClient, pages_for, serve_requests)
+from repro.serve.disagg import (CTRL_TAG, DisaggServer, block_tag,
+                                serve_requests_disagg)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("paper_demo", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+PROMPTS = [
+    list(range(1, 12)),          # 11 tokens -> 3 pages @ page_size=4
+    list(range(5, 14)),          # 9 tokens
+    [2, 3, 4, 5, 6],             # 5 tokens
+    list(range(7, 20)),          # 13 tokens -> 4 pages
+]
+
+
+def _colocated(cfg, params, reqs, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_cache_len", 64)
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_seq_len", 48)
+    return serve_requests(cfg, params, reqs, timeout=300, **kw)
+
+
+def _disagg(cfg, params, reqs, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_cache_len", 64)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_seq_len", 48)
+    return serve_requests_disagg(cfg, params, reqs, timeout=300, **kw)
+
+
+def _drain(srv, timeout=60.0):
+    t0 = time.monotonic()
+    while not srv.idle:
+        assert time.monotonic() - t0 < timeout, "disagg server stuck"
+        if not srv.step():
+            time.sleep(1e-4)
+
+
+def _assert_no_leaks(srv):
+    assert srv.decode.pool.pages_in_use == 0
+    assert srv.prefill.pool.pages_in_use == 0
+
+
+# ------------------------------------------------------- token identity
+def test_disagg_matches_colocated_greedy(small_model):
+    cfg, params = small_model
+    colo = _colocated(cfg, params, [Request(p, 8) for p in PROMPTS])
+    reqs = [Request(p, 8) for p in PROMPTS]
+    srv = DisaggServer(cfg, params, max_batch=2, max_cache_len=64,
+                       page_size=4, max_seq_len=48, chunk_pages=1)
+    try:
+        for r in reqs:
+            srv.submit(r)
+        srv.close_intake()
+        srv.run(timeout=300)
+        assert [r.tokens for r in reqs] == [r.tokens for r in colo]
+        assert all(r.req_state is RequestState.FINISHED for r in reqs)
+        _assert_no_leaks(srv)
+        m = srv.metrics()
+        assert m["finished"] == len(PROMPTS)
+        assert m["blocks_shipped"] == sum(pages_for(len(p), 4)
+                                          for p in PROMPTS)
+        assert m["bytes_shipped_per_request"] > 0
+    finally:
+        srv.shutdown()
+
+
+def test_disagg_matches_colocated_speculative(small_model):
+    """The decode role runs the same verify steps as the colocated
+    engine; speculation changes the schedule, never the tokens."""
+    cfg, params = small_model
+    colo = _colocated(cfg, params, [Request(p, 8) for p in PROMPTS],
+                      speculate=3)
+    reqs = [Request(p, 8) for p in PROMPTS]
+    srv = DisaggServer(cfg, params, max_batch=2, max_cache_len=64,
+                       page_size=4, max_seq_len=48, speculate=3)
+    try:
+        for r in reqs:
+            srv.submit(r)
+        srv.close_intake()
+        srv.run(timeout=300)
+        assert [r.tokens for r in reqs] == [r.tokens for r in colo]
+        assert srv.decode.stats["verify_steps"] > 0
+        _assert_no_leaks(srv)
+    finally:
+        srv.shutdown()
+
+
+def test_disagg_matches_colocated_on_prefix_hit_traffic(small_model):
+    """Traffic where the colocated engine takes the prefix-cache suffix
+    path (second request reuses the first's prompt pages): the prefill
+    role recomputes instead of sharing — tokens must still be identical."""
+    cfg, params = small_model
+    base = list(range(30, 42))              # 12 tokens = 3 full pages
+    prompts = [base + [50], base + [60, 61, 62]]
+    colo_reqs = [Request(p, 6) for p in prompts]
+    from repro.serve import ServeEngine
+    eng = ServeEngine(cfg, params, max_batch=2, max_cache_len=64,
+                      paged=True, page_size=4, max_seq_len=48)
+    try:
+        # both in flight at once: the second request's prefill sees the
+        # first's resident prompt pages and takes the suffix path
+        for r in colo_reqs:
+            eng.submit(r)
+        eng.close_intake()
+        eng.run(timeout=300)
+        assert eng.pool.stats["prefix_hits"] > 0     # hit path exercised
+    finally:
+        eng.shutdown()
+    reqs = [Request(p, 6) for p in prompts]
+    srv = DisaggServer(cfg, params, max_batch=2, max_cache_len=64,
+                       page_size=4, max_seq_len=48)
+    try:
+        for r in reqs:
+            srv.submit(r)
+        srv.close_intake()
+        srv.run(timeout=300)
+        assert [r.tokens for r in reqs] == [r.tokens for r in colo_reqs]
+        _assert_no_leaks(srv)
+    finally:
+        srv.shutdown()
+
+
+def test_single_token_request_answered_at_prefill_role(small_model):
+    """max_tokens=1 is answered entirely by the prefill role: no header,
+    no KV shipped, no decode involvement."""
+    cfg, params = small_model
+    colo = _colocated(cfg, params, [Request([3, 4, 5, 6], 1)])
+    reqs = [Request([3, 4, 5, 6], 1)]
+    srv = DisaggServer(cfg, params, max_batch=2, max_cache_len=64,
+                       page_size=4, max_seq_len=48)
+    try:
+        srv.submit(reqs[0])
+        srv.close_intake()
+        srv.run(timeout=300)
+        assert reqs[0].tokens == colo[0].tokens
+        assert len(reqs[0].tokens) == 1
+        assert reqs[0] in srv.prefill.retired
+        assert srv.metrics()["blocks_shipped"] == 0
+        assert srv.decode.ingest_stats["headers"] == 0
+        _assert_no_leaks(srv)
+    finally:
+        srv.shutdown()
+
+
+# -------------------------------------------------- per-block pipelining
+def test_blocks_ship_before_prefill_finishes(small_model):
+    """The disaggregation claim itself: with chunked prefill, the decode
+    role installs the FIRST KV block before the prefill role finishes the
+    last chunk — per-block pipelining, not a barrier at end-of-prompt."""
+    cfg, params = small_model
+    reqs = [Request(p, 6) for p in PROMPTS if len(p) > 8]
+    srv = DisaggServer(cfg, params, max_batch=2, max_cache_len=64,
+                       page_size=4, max_seq_len=48, chunk_pages=1)
+    try:
+        for r in reqs:
+            srv.submit(r)
+        srv.close_intake()
+        srv.run(timeout=300)
+        ev = srv.events
+        for r in reqs:
+            first_install = ev.index(("install", r.req_id, 0))
+            prefill_done = ev.index(("prefill_done", r.req_id))
+            assert first_install < prefill_done, (
+                f"req {r.req_id}: first block landed only after prefill "
+                f"finished — no pipelining ({ev})")
+        _assert_no_leaks(srv)
+    finally:
+        srv.shutdown()
+
+
+def test_transport_per_tag_accounting(small_model):
+    """KV bandwidth is observable per channel: each request's block tag
+    carries exactly its prompt pages at page_nbytes each; control traffic
+    stays on CTRL_TAG."""
+    cfg, params = small_model
+    reqs = [Request(PROMPTS[0], 6), Request(PROMPTS[3], 6)]
+    srv = DisaggServer(cfg, params, max_batch=2, max_cache_len=64,
+                       page_size=4, max_seq_len=48)
+    try:
+        for r in reqs:
+            srv.submit(r)
+        srv.close_intake()
+        srv.run(timeout=300)
+        stats = srv.transport.stats()
+        page_nbytes = srv.prefill.pool.page_nbytes
+        for r, prompt in zip(reqs, (PROMPTS[0], PROMPTS[3])):
+            t = stats["per_tag"][block_tag(r.req_id)]
+            n = pages_for(len(prompt), 4)
+            assert t["sent_msgs"] == t["recvd_msgs"] == n
+            assert t["sent_bytes"] == t["recvd_bytes"] == n * page_nbytes
+        ctrl = stats["per_tag"][CTRL_TAG]
+        # header + done per request, all matched by the standing recv
+        assert ctrl["sent_msgs"] == ctrl["recvd_msgs"] == 2 * len(reqs)
+        assert stats["sent_bytes"] >= srv.prefill.bytes_shipped
+        _assert_no_leaks(srv)
+    finally:
+        srv.shutdown()
+
+
+# --------------------------------------------------------- cancel paths
+def test_cancel_mid_prefill_releases_both_pools(small_model):
+    """Cancel while chunks are still running: the prefill role aborts,
+    the decode role cancels its outstanding block receives, and neither
+    pool leaks a page."""
+    cfg, params = small_model
+    srv = DisaggServer(cfg, params, max_batch=2, max_cache_len=64,
+                       page_size=4, max_seq_len=48, chunk_pages=1)
+    try:
+        req = Request(list(range(1, 14)), 8)      # 4 pages of prompt
+        srv.submit(req)
+        # step until the header went out but prefill hasn't finished
+        t0 = time.monotonic()
+        while ("header", req.req_id) not in srv.events:
+            assert time.monotonic() - t0 < 60
+            srv.step()
+        assert ("prefill_done", req.req_id) not in srv.events
+        req.cancel()
+        srv.close_intake()
+        _drain(srv)
+        assert req.req_state is RequestState.CANCELLED
+        assert req.tokens == []
+        assert ("abort", req.req_id) in srv.events
+        _assert_no_leaks(srv)
+        assert not srv.decode._landings and not srv.prefill._jobs
+    finally:
+        srv.shutdown()
+
+
+def test_cancel_mid_shipping_discards_remaining_blocks(small_model):
+    """Cancel after at least one block landed but before seating: already
+    installed blocks are discarded with the landing, in-flight receives
+    cancel atomically, and both pools drain to zero."""
+    cfg, params = small_model
+    srv = DisaggServer(cfg, params, max_batch=2, max_cache_len=64,
+                       page_size=4, max_seq_len=48, chunk_pages=1)
+    try:
+        req = Request(list(range(1, 14)), 8)
+        srv.submit(req)
+        t0 = time.monotonic()
+        while ("install", req.req_id, 0) not in srv.events:
+            assert time.monotonic() - t0 < 60
+            srv.step()
+        assert ("seat", req.req_id) not in srv.events
+        req.cancel()
+        srv.close_intake()
+        _drain(srv)
+        assert req.req_state is RequestState.CANCELLED
+        ingest = srv.decode.ingest_stats
+        assert ingest["blocks_installed"] >= 1
+        _assert_no_leaks(srv)
+        assert not srv.decode._landings and not srv.prefill._jobs
+        # no receive left dangling on the ingest CR
+        assert srv.decode.cr_ingest.active_count == 0
+    finally:
+        srv.shutdown()
+
+
+def test_cancel_while_queued_at_router(small_model):
+    """A request cancelled before the prefill role ever activates it is
+    dropped cleanly (the zero-shipped abort clears the decode role's
+    expectation) and everything drains."""
+    cfg, params = small_model
+    srv = DisaggServer(cfg, params, max_batch=2, max_cache_len=64,
+                       page_size=4, max_seq_len=48, prefill_jobs=1)
+    try:
+        live = Request(PROMPTS[0], 6)
+        queued = Request(PROMPTS[1], 6)
+        srv.submit(live)
+        srv.submit(queued)
+        queued.cancel()                   # before any step routes it
+        srv.close_intake()
+        srv.run(timeout=300)
+        assert live.req_state is RequestState.FINISHED
+        assert queued.req_state is RequestState.CANCELLED
+        assert not srv.decode._expected
+        _assert_no_leaks(srv)
+    finally:
+        srv.shutdown()
+
+
+# ---------------------------------------------------------- backpressure
+def test_decode_pool_backpressure_defers_landing(small_model):
+    """A decode pool too small for two footprints at once: the second
+    landing defers until the first retires, then completes — no deadlock,
+    no leak, identical tokens."""
+    cfg, params = small_model
+    prompts = [PROMPTS[0], PROMPTS[1]]
+    colo = _colocated(cfg, params, [Request(p, 6) for p in prompts])
+    reqs = [Request(p, 6) for p in prompts]
+    # each request needs pages_for(plen + 6, 4) <= 5 pages; give the
+    # decode pool room for one footprint plus a page, not two
+    srv = DisaggServer(cfg, params, max_batch=2, max_cache_len=64,
+                       page_size=4, max_seq_len=48, total_pages=6)
+    try:
+        for r in reqs:
+            srv.submit(r)
+        srv.close_intake()
+        srv.run(timeout=300)
+        assert [r.tokens for r in reqs] == [r.tokens for r in colo]
+        assert srv.decode.ingest_stats["landings_deferred"] >= 1
+        _assert_no_leaks(srv)
+    finally:
+        srv.shutdown()
+
+
+# ------------------------------------------------------- streaming front
+def test_stream_client_over_disagg_server(small_model):
+    """The ServeClient streaming front-end drives a DisaggServer through
+    the same duck-typed surface as a colocated engine — per-token streams
+    land identically."""
+    cfg, params = small_model
+    colo = _colocated(cfg, params, [Request(p, 8) for p in PROMPTS])
+    baseline = [r.tokens for r in colo]
+    srv = DisaggServer(cfg, params, max_batch=2, max_cache_len=64,
+                       page_size=4, max_seq_len=48)
+    with ServeClient(engine=srv) as client:
+        session = client.session(max_tokens=8)
+        streams = [session.generate(p) for p in PROMPTS]
+        assert [list(s) for s in streams] == baseline
+        for s in streams:
+            assert s.reason == "finished"
+        m = client.metrics()
+        assert m["disaggregated"] is True
+    _assert_no_leaks(srv)
+
+
+def test_disagg_respects_request_deadline(small_model):
+    """A request whose deadline already passed at routing expires without
+    prefill compute or page allocation at either role."""
+    cfg, params = small_model
+    srv = DisaggServer(cfg, params, max_batch=2, max_cache_len=64,
+                       page_size=4, max_seq_len=48)
+    try:
+        doomed = Request(PROMPTS[0],
+                         GenerationConfig(max_tokens=6, deadline_s=1e-6),
+                         arrival_time=time.monotonic() - 1.0)
+        live = Request(PROMPTS[2], 6)
+        srv.submit(doomed)
+        srv.submit(live)
+        srv.close_intake()
+        srv.run(timeout=300)
+        assert doomed.req_state is RequestState.EXPIRED
+        assert live.req_state is RequestState.FINISHED
+        assert srv.prefill.stats["jobs"] == 1       # doomed never started
+        _assert_no_leaks(srv)
+    finally:
+        srv.shutdown()
