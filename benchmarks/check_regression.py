@@ -80,6 +80,15 @@ GATED = {
     # lands at 3-8x — far past any band.
     "await_vs_raw_notify_latency": (
         lambda d: d["api"]["raw_vs_await_ratio"], 0.3),
+    # multi-replica front door: the prefix-affinity claim — on a
+    # shared-prefix trace over 2 replicas, >0.8 of dispatches must route
+    # by affinity. Deterministic by construction (optimistic digest
+    # insert at dispatch; each prefix group's first request is the only
+    # unavoidable miss), so the band is narrow: the quick trace (4
+    # groups x 6) measures exactly 0.8333, the full trace (4 x 10) 0.9,
+    # and the floor sits just above the 0.8 design target.
+    "router_affinity_hit_rate": (
+        lambda d: d["router"]["affinity_hit_rate"], 0.035),
 }
 
 # gates enforced only when their predicate holds for this run's
@@ -117,6 +126,14 @@ RECORDED = {
         lambda d: d["disagg"]["tokens_per_s_ratio"],
     "disagg_bytes_shipped_per_request":
         lambda d: d["disagg"]["bytes_shipped_per_request"],
+    # router vs one colocated engine: recorded only — two replicas share
+    # the process's CPU, so the ratio prices the routing control plane,
+    # it is not a throughput win; failover correctness (zero loss,
+    # token-identical replay) is enforced by tests/serve/test_router.py
+    "router_vs_colocated_tokens_per_s":
+        lambda d: d["router"]["tokens_per_s_ratio"],
+    "router_failover_requeued":
+        lambda d: d["router"]["failover"]["requeued"],
 }
 
 

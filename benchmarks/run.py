@@ -1274,6 +1274,155 @@ def bench_serve_disagg() -> None:
     print("# appended disagg block to BENCH_serve.json", flush=True)
 
 
+# ==================== beyond paper: multi-replica front door (router)
+def bench_serve_router() -> None:
+    """The multi-replica front door (prefix-affinity routing, tenant
+    fairness, heartbeat failover) over 2 replicas vs one colocated engine
+    on a shared-prefix trace, plus a failover drill.
+
+    * ``affinity_hit_rate`` — fraction of dispatches routed by prefix
+      affinity on the shared-prefix trace (4 prefix groups; each group's
+      first request is an unavoidable miss, the rest must follow their
+      prefix). GATED: deterministic by construction (optimistic digest
+      insert at dispatch), so the floor sits just above the 0.8 design
+      target.
+    * ``tokens_per_s_ratio`` — router-over-2-replicas tokens/s over one
+      colocated engine. Recorded only: in one process the replicas share
+      the CPU, so this is the price of the routing/control plane
+      (~0.7-1.0x), not a throughput win.
+    * failover drill — a second wave on the same router; one replica is
+      killed mid-decode and the heartbeat sweep must requeue its work
+      with zero requests lost and token-identical greedy output
+      (also enforced by tests/serve/test_router.py in CI).
+
+    Appends a ``router`` block to BENCH_serve.json.
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve import Request, Router, serve_requests
+
+    cfg = get_config("paper_demo", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    per_group = 6 if QUICK else 10
+    n_groups, shared_len, length = 4, 8, 12
+    page_size = 4
+    max_seq = shared_len + 1 + length
+    prompts = [list(range(1 + 10 * g, 1 + 10 * g + shared_len)) + [200 + i]
+               for g in range(n_groups) for i in range(per_group)]
+    n_requests = len(prompts)
+    useful_tokens = n_requests * length
+    kw = dict(max_batch=4, max_cache_len=max_seq, paged=True,
+              page_size=page_size, max_seq_len=max_seq)
+
+    def mk_reqs():
+        rs = [Request(p, length) for p in prompts]
+        for r in rs:
+            r.arrival_time = time.monotonic()
+        return rs
+
+    def colocated_trial():
+        reqs = mk_reqs()
+        t0 = time.monotonic()
+        serve_requests(cfg, params, reqs, timeout=600, **kw)
+        dt = time.monotonic() - t0
+        ttfts = [r.ttft for r in reqs if r.ttft is not None]
+        return dt, sum(ttfts) / len(ttfts), \
+            {tuple(p): list(r.tokens) for p, r in zip(prompts, reqs)}
+
+    colo_best, colo_ttft, expected = colocated_trial()
+    dt, ttft, _ = colocated_trial()        # best-of-2, first warms compile
+    if dt < colo_best:
+        colo_best, colo_ttft = dt, ttft
+
+    # saturation >= trace size: the bench measures AFFINITY, so the
+    # fallback path (covered by tests) must not add timing-dependent
+    # misses — exactly one miss per prefix group remains
+    router = Router(cfg, params, n_replicas=2, saturation=n_requests,
+                    heartbeat_timeout_s=0.1, sweep_interval_s=0.01, **kw)
+    # untimed warmup: compile both replicas' step functions. Prompts are
+    # disjoint from the trace prefixes so the affinity measurement keeps
+    # its exactly-one-miss-per-group structure.
+    warm = [Request(list(range(400 + 10 * i, 400 + 10 * i + shared_len)), 2)
+            for i in range(4)]
+    for r in warm:
+        router.submit(r)
+    router.run(timeout=600, until=lambda: len(router.retired) == len(warm))
+    hits0, routed0 = (router.stats["affinity_hits"],
+                      router.stats["routed"])
+    reqs = mk_reqs()
+    t0 = time.monotonic()
+    for r in reqs:
+        router.submit(r)
+    router.run(timeout=600,
+               until=lambda: len(router.retired) == len(warm) + n_requests)
+    rout_best = time.monotonic() - t0
+    hit_rate = (router.stats["affinity_hits"] - hits0) \
+        / (router.stats["routed"] - routed0)
+    ttfts = [r.ttft for r in reqs if r.ttft is not None]
+    rout_ttft = sum(ttfts) / len(ttfts)
+
+    # failover drill: same router (warm compile caches), second wave;
+    # kill whichever replica is observed mid-decode first
+    wave = mk_reqs()
+    for r in wave:
+        router.submit(r)
+    victim, deadline = None, time.monotonic() + 300
+    while victim is None and time.monotonic() < deadline:
+        router.step()
+        for t in router._tracked.values():
+            if t.rank is not None and t.original.delivered >= 2:
+                victim = t.rank
+                break
+    router.kill_replica(victim)
+    router.close_intake()
+    router.run(timeout=600)
+    zero_loss = sum(1 for r in wave if r.req_state.value == "finished") \
+        == n_requests
+    identical = all(r.tokens == expected[tuple(p)]
+                    for p, r in zip(prompts, wave))
+    m2 = router.metrics()
+    router.shutdown()
+
+    colo_tps = useful_tokens / colo_best
+    rout_tps = useful_tokens / rout_best
+    tps_ratio = rout_tps / colo_tps
+
+    emit("serve.router.routed", rout_best / useful_tokens * 1e6,
+         f"{rout_tps:.0f}_tok_per_s_ttft_{rout_ttft * 1e3:.0f}ms")
+    emit("serve.router.colocated_baseline",
+         colo_best / useful_tokens * 1e6,
+         f"{colo_tps:.0f}_tok_per_s_ttft_{colo_ttft * 1e3:.0f}ms")
+    emit("serve.router.affinity_hit_rate", 0.0,
+         f"{hit_rate:.3f}_over_{n_requests}_requests")
+    emit("serve.router.failover", 0.0,
+         f"zero_loss_{zero_loss}_identical_{identical}_requeued_"
+         f"{m2['requeued']}")
+
+    try:
+        with open("BENCH_serve.json") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        doc = {}
+    doc["router"] = {
+        "workload": {"n_requests": n_requests, "prefix_groups": n_groups,
+                     "shared_len": shared_len, "length": length,
+                     "page_size": page_size, "n_replicas": 2},
+        "affinity_hit_rate": hit_rate,
+        "tokens_per_s_ratio": tps_ratio,
+        "router": {"tokens_per_s": rout_tps, "makespan_s": rout_best,
+                   "ttft_mean_s": rout_ttft},
+        "colocated": {"tokens_per_s": colo_tps, "makespan_s": colo_best,
+                      "ttft_mean_s": colo_ttft},
+        "failover": {"zero_loss": zero_loss, "token_identical": identical,
+                     "failovers": m2["failovers"],
+                     "requeued": m2["requeued"]},
+    }
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(doc, f, indent=2)
+    print("# appended router block to BENCH_serve.json", flush=True)
+
+
 # ========================= beyond paper: API layer (flags + await bridge)
 def bench_api() -> None:
     """Per-registration flag overhead and awaitable-bridge notification
@@ -1414,11 +1563,11 @@ ALL_BENCHES = (bench_notification, bench_scheduler, bench_zones,
                bench_dataflow, bench_offload, bench_loc,
                bench_train_overlap, bench_serve, bench_serve_paged,
                bench_serve_kernel, bench_serve_spec, bench_serve_stream,
-               bench_serve_disagg, bench_api)
+               bench_serve_disagg, bench_serve_router, bench_api)
 QUICK_BENCHES = (bench_notification, bench_scheduler, bench_loc,
                  bench_serve, bench_serve_paged, bench_serve_kernel,
                  bench_serve_spec, bench_serve_stream,
-                 bench_serve_disagg, bench_api)
+                 bench_serve_disagg, bench_serve_router, bench_api)
 
 
 def main() -> None:

@@ -183,6 +183,30 @@ class Transport:
         self._on_enter()
         return op
 
+    def cancel_posted(self, rank: int, source: int = ANY_SOURCE,
+                      tag: int = ANY_TAG) -> int:
+        """Cancel every receive posted at ``rank`` matching ``source``/
+        ``tag`` (wildcards allowed); returns how many were cancelled.
+
+        The failure-recovery primitive: when a peer is declared dead, its
+        partner tears down the standing receives armed for that peer so
+        their continuations observe CANCELLED (paper Listing 4) instead
+        of waiting forever. Matching is evaluated against the *receive's*
+        selectors — a recv posted with ``ANY_SOURCE`` is only swept by a
+        wildcard ``source`` here, since a specific dead peer cannot claim
+        a receive that other, live peers may still satisfy."""
+        box = self._boxes[rank]
+        with box.lock:
+            victims = [op for op in box.posted
+                       if (source == ANY_SOURCE or op.source == source)
+                       and (tag == ANY_TAG or op.tag == tag)]
+        cancelled = 0
+        for op in victims:
+            if op.cancel():
+                cancelled += 1
+        self._on_enter()
+        return cancelled
+
     def send(self, source: int, dest: int, tag: int, payload: Any,
              timeout: float = 30.0) -> None:
         """Blocking convenience send."""

@@ -48,22 +48,62 @@ class HeartbeatMonitor:
     def __init__(self, transport: Transport, engine: Engine, rank: int,
                  watched: List[int], timeout_s: float = 0.2,
                  sweep_interval_s: float = 0.05,
-                 on_failure: Optional[Callable[[int], None]] = None) -> None:
+                 on_failure: Optional[Callable[[int], None]] = None,
+                 stall_guard_s: Optional[float] = None) -> None:
         self.transport = transport
         self.engine = engine
         self.rank = rank
         self.timeout_s = timeout_s
         self.sweep_interval_s = sweep_interval_s
         self.on_failure = on_failure or (lambda r: None)
-        self.last_seen: Dict[int, float] = {r: time.monotonic()
-                                            for r in watched}
+        # Self-suspicion guard: when the monitor shares its driver thread
+        # with heavy compute (the router's loop jit-compiles replica
+        # steps), a long gap between sweeps means beats COULD NOT be
+        # observed — silence proves nothing. With ``stall_guard_s`` set,
+        # a sweep arriving more than that long after the previous one
+        # restarts every silence clock instead of flagging; genuine
+        # deaths are still caught one quiet timeout window later.
+        self.stall_guard_s = stall_guard_s
+        self._last_sweep = time.monotonic()
+        # ``last_seen`` is seeded lazily by the first *actual* beat — a
+        # construction-time timestamp would vouch for ranks the monitor
+        # has never heard from. Until a rank beats, the sweep measures
+        # silence against its ``watch()`` time instead, so a rank that is
+        # dead on arrival is still flagged one timeout after watch-start.
+        self.last_seen: Dict[int, float] = {}
+        self._watch_start: Dict[int, float] = {}
         self.failed: Set[int] = set()
         self._lock = threading.Lock()
         self._stopped = False
         self._sweep_error: Optional[BaseException] = None
+        for r in watched:
+            self.watch(r)
         self.cr = engine.continue_init()
         self._post_recv()
         self._post_sweep()
+
+    # ------------------------------------------------------- watch set
+    def watch(self, rank: int, now: Optional[float] = None) -> None:
+        """(Re-)watch ``rank``: its silence clock starts now. Re-watching
+        a failed rank clears its failure so recovery can be observed."""
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            self._watch_start[rank] = now
+            self.last_seen.pop(rank, None)
+            self.failed.discard(rank)
+
+    def unwatch(self, rank: int) -> None:
+        """Stop watching ``rank`` (elastic shrink: a rank the controller
+        already removed must not re-fire ``on_failure``)."""
+        with self._lock:
+            self._watch_start.pop(rank, None)
+            self.last_seen.pop(rank, None)
+            self.failed.discard(rank)
+
+    @property
+    def watched(self) -> List[int]:
+        with self._lock:
+            return sorted(self._watch_start)
 
     # heartbeat receive → record → re-post (continuation body starts new op)
     def _post_recv(self) -> None:
@@ -78,7 +118,8 @@ class HeartbeatMonitor:
             return
         _, rank, _ = status.payload
         with self._lock:
-            self.last_seen[rank] = time.monotonic()
+            if rank in self._watch_start:
+                self.last_seen[rank] = time.monotonic()
         self._post_recv()
 
     # periodic sweep via the awaitable front-end: a promise over a TimerOp,
@@ -98,9 +139,18 @@ class HeartbeatMonitor:
         if self._stopped:
             return
         now = time.monotonic()
+        gap, self._last_sweep = now - self._last_sweep, now
+        if self.stall_guard_s is not None and gap > self.stall_guard_s:
+            with self._lock:
+                for rank in self._watch_start:
+                    self._watch_start[rank] = now
+                    self.last_seen.pop(rank, None)
+            self._post_sweep()
+            return
         newly_failed = []
         with self._lock:
-            for rank, seen in self.last_seen.items():
+            for rank, started in self._watch_start.items():
+                seen = self.last_seen.get(rank, started)
                 if rank not in self.failed and now - seen > self.timeout_s:
                     self.failed.add(rank)
                     newly_failed.append(rank)

@@ -36,16 +36,32 @@ Layers:
   continuation transport, KV pages shipped per-block as chunked prefill
   produces them, with the ``DisaggServer`` router exposing the same
   serving surface (so token streams run over it unchanged).
+* ``serve.protocol`` — ``EngineLike``, the runtime-checkable structural
+  protocol every serving tier satisfies (``ServeEngine`` /
+  ``DisaggServer`` / ``Router``); ``ServeClient`` binds to any of them.
+* ``serve.metrics`` — ``ServeMetrics``, the typed read-only metrics
+  mapping every tier's ``metrics()`` returns (legacy flat-dict keys keep
+  working through deprecated aliases).
+* ``serve.router``  — the multi-replica front door: prefix-affinity
+  routing over gossiped ``PagePool`` digests, weighted per-tenant
+  fairness (``FairBatcher`` DRR + ``QuotaExceeded`` admission control),
+  and heartbeat-driven failover that requeues a dead replica's in-flight
+  requests with token-identical greedy replay.
 """
 from repro.serve.api import ServeClient, Session, TokenStream
-from repro.serve.batcher import Batcher
-from repro.serve.config import DeadlineExceeded, GenerationConfig
+from repro.serve.batcher import Batcher, FairBatcher
+from repro.serve.config import (DeadlineExceeded, GenerationConfig,
+                                QuotaExceeded)
 from repro.serve.disagg import (DecodeWorker, DisaggServer, KVBlockMsg,
                                 PrefillWorker, serve_requests_disagg)
 from repro.serve.drafter import Drafter, NgramDrafter, RepeatDrafter
 from repro.serve.engine import ServeEngine, serve_requests
-from repro.serve.kv_cache import PagePool, paged_supported, pages_for
+from repro.serve.kv_cache import (PagePool, paged_supported, pages_for,
+                                  prefix_keys)
+from repro.serve.metrics import ServeMetrics
+from repro.serve.protocol import EngineLike
 from repro.serve.request import Request, RequestState, summarize
+from repro.serve.router import ReplicaWorker, Router
 from repro.serve.steps import (greedy_generate, make_batched_decode_step,
                                make_decode_step, make_paged_decode_step,
                                make_paged_suffix_step,
@@ -61,4 +77,6 @@ __all__ = [
     "NgramDrafter", "RepeatDrafter", "GenerationConfig", "DeadlineExceeded",
     "ServeClient", "Session", "TokenStream", "DisaggServer", "PrefillWorker",
     "DecodeWorker", "KVBlockMsg", "serve_requests_disagg",
+    "EngineLike", "ServeMetrics", "FairBatcher", "QuotaExceeded",
+    "prefix_keys", "Router", "ReplicaWorker",
 ]

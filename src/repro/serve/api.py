@@ -44,6 +44,8 @@ from typing import Any, Callable, Iterator, List, Optional, Union
 from repro.core import Promise, PromiseCancelled, Signal
 from repro.serve.config import DeadlineExceeded, GenerationConfig
 from repro.serve.engine import ServeEngine
+from repro.serve.metrics import ServeMetrics
+from repro.serve.protocol import EngineLike
 from repro.serve.request import Request, RequestState
 
 
@@ -246,19 +248,24 @@ class Session:
 
 
 class ServeClient:
-    """Process-local serving client: owns a ``ServeEngine`` and the one
-    thread driving its decode loop, so callers (sync or async, any
+    """Process-local serving client: owns an ``EngineLike`` tier and the
+    one thread driving its serve loop, so callers (sync or async, any
     thread) only ever touch sessions and streams.
 
     Build it over a model (``ServeClient(cfg, params, max_batch=8, ...)``
-    — engine kwargs pass through) or wrap an existing engine
-    (``ServeClient(engine=serve_engine)``). The decode loop starts
-    lazily with the first submission; ``close()`` drains and joins it.
-    Usable as a context manager.
+    — engine kwargs pass through to ``ServeEngine``) or wrap ANY tier
+    satisfying ``serve.protocol.EngineLike``
+    (``ServeClient(engine=serve_engine_or_disagg_or_router)``): the
+    client speaks only the protocol surface (``submit``/``step``/
+    ``metrics``/``shutdown`` plus the ``batcher``/``idle`` drain
+    contract), so one client binds to the colocated engine, the
+    disaggregated server, or the multi-replica router interchangeably.
+    The serve loop starts lazily with the first submission; ``close()``
+    drains and joins it. Usable as a context manager.
     """
 
     def __init__(self, cfg: Any = None, params: Any = None, *,
-                 engine: Optional[ServeEngine] = None,
+                 engine: Optional[EngineLike] = None,
                  detokenize: Optional[Callable[[List[int]], str]] = None,
                  defaults: Optional[GenerationConfig] = None,
                  idle_sleep: float = 5e-5,
@@ -270,7 +277,11 @@ class ServeClient:
             engine = ServeEngine(cfg, params, **engine_kwargs)
         elif engine_kwargs:
             raise ValueError("engine= and engine kwargs are exclusive")
-        self.serve = engine
+        elif not isinstance(engine, EngineLike):
+            raise TypeError(
+                f"engine= must satisfy serve.protocol.EngineLike, got "
+                f"{type(engine).__name__}")
+        self.serve: EngineLike = engine
         self.detokenize = detokenize or _default_detokenize
         self.defaults = defaults or GenerationConfig()
         self._idle_sleep = idle_sleep
@@ -355,7 +366,7 @@ class ServeClient:
             for req in live:
                 req.cancel()
 
-    def metrics(self) -> dict:
+    def metrics(self) -> ServeMetrics:
         return self.serve.metrics()
 
     def close(self, timeout: Optional[float] = 60.0) -> None:

@@ -20,6 +20,11 @@ first), arrival order within a priority class. Requests whose
 ``config.deadline_s`` already passed while queued are *refused* — expired
 with ``DeadlineExceeded`` instead of wasting prefill compute — and
 capacity-deferred requests requeue at the head of their priority class.
+
+The queue discipline itself is pluggable (``_push``/``_push_head``/
+``_pop`` hooks): ``FairBatcher`` keeps the strict priority classes but
+runs weighted deficit round robin across tenants *within* each class —
+the multi-replica router's admission scheduler.
 """
 from __future__ import annotations
 
@@ -27,7 +32,8 @@ import heapq
 import itertools
 import threading
 import time
-from typing import Callable, List, Optional
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
 
 from repro.core.completable import Completable
 from repro.core.engine import Engine
@@ -112,21 +118,42 @@ class Batcher:
             return self._closed
 
     # ----------------------------------------------------------- loop side
-    def _on_submit(self, statuses, request: Request) -> None:
+    # The queue discipline lives behind three overridable hooks (_push /
+    # _push_head / _pop) so subclasses can change ORDERING without
+    # touching the intake CR, the drop/refusal policy, or the drain
+    # contract. The base discipline: strict priority, FIFO within class.
+    def _push(self, request: Request) -> None:
         heapq.heappush(self._pending,
                        (-request.priority, next(self._arrival_seq), request))
 
+    def _push_head(self, request: Request) -> None:
+        heapq.heappush(self._pending,
+                       (-request.priority, next(self._head_seq), request))
+
+    def _pop(self) -> Optional[Request]:
+        if not self._pending:
+            return None
+        return heapq.heappop(self._pending)[2]
+
+    def _queue_len(self) -> int:
+        return len(self._pending)
+
+    def _on_submit(self, statuses, request: Request) -> None:
+        self._push(request)
+
     def admit(self, max_n: int) -> List[Request]:
         """Drain queued submissions and hand out up to ``max_n`` requests
-        in priority order, refusing past-deadline work.
+        in QoS order, refusing past-deadline work.
 
         Must be called from the decode loop only (single-tester CR rule).
         """
         self.cr.test()
         now = time.monotonic()
         out: List[Request] = []
-        while self._pending and len(out) < max_n:
-            _, _, req = heapq.heappop(self._pending)
+        while len(out) < max_n:
+            req = self._pop()
+            if req is None:
+                break
             if req.req_state is RequestState.CANCELLED:
                 self.stats["dropped_cancelled"] += 1
                 if self._on_drop is not None:
@@ -149,20 +176,152 @@ class Batcher:
         """Return an admitted-but-unplaceable request to the head of its
         priority class (loop thread only — the paged engine defers
         admission when the page pool can't cover the request's worst-case
-        footprint)."""
+        footprint, and the router re-queues a dead replica's in-flight
+        work)."""
         request.on_requeued()
-        heapq.heappush(self._pending,
-                       (-request.priority, next(self._head_seq), request))
+        self._push_head(request)
         self.stats["admitted"] -= 1
 
     @property
     def queued(self) -> int:
-        """Submissions already transferred to the pending heap (does not
+        """Submissions already transferred to the pending queue (does not
         count ones still sitting on the CR until the next admit())."""
-        return len(self._pending)
+        return self._queue_len()
 
     @property
     def drained(self) -> bool:
         """True when intake is closed and nothing is waiting for admission."""
-        return (self.closed and not self._pending
+        return (self.closed and self._queue_len() == 0
                 and self.cr.active_count == 0)
+
+
+class _TenantClass:
+    """One priority class inside ``FairBatcher``: a head lane for
+    requeued work plus per-tenant FIFO queues under deficit round-robin."""
+
+    __slots__ = ("head", "queues", "rotation", "deficit", "count")
+
+    def __init__(self) -> None:
+        self.head: Deque[Request] = deque()
+        self.queues: Dict[str, Deque[Request]] = {}
+        self.rotation: Deque[str] = deque()    # tenants with queued work
+        self.deficit: Dict[str, float] = {}
+        self.count = 0
+
+
+class FairBatcher(Batcher):
+    """Weighted per-tenant fairness under the strict priority classes.
+
+    Ordering: strict ``config.priority`` classes first (identical to the
+    base ``Batcher``), then — *within* a class — weighted deficit round
+    robin (DRR) across tenants, with a request's cost its ``max_tokens``
+    budget. Each rotation visit grants a tenant ``quantum * weight``
+    token-credits; a tenant whose front request costs more saves its
+    deficit for the next visit, so over time admitted token-budget
+    converges to the weight ratios while cheap-request tenants still
+    can't be starved by expensive-request ones.
+
+    ``requeue`` bypasses fairness entirely: a request returned at the
+    head of its class (capacity deferral, replica-death failover) already
+    charged its tenant's deficit when first admitted — it pops before any
+    DRR lane next time.
+
+    Weights default to 1.0 per tenant (``weights=`` overrides per name;
+    must be > 0). Same single-consumer rule as ``Batcher``: queue state
+    is only touched on the loop thread.
+    """
+
+    def __init__(self, engine: Engine, *,
+                 weights: Optional[Dict[str, float]] = None,
+                 quantum: float = 32.0,
+                 on_drop: Optional[Callable[[Request], None]] = None) -> None:
+        super().__init__(engine, on_drop=on_drop)
+        self.weights: Dict[str, float] = dict(weights or {})
+        for tenant, w in self.weights.items():
+            if not float(w) > 0.0:
+                raise ValueError(
+                    f"tenant weight must be > 0, got {tenant!r}: {w}")
+        self.quantum = float(quantum)
+        if self.quantum <= 0:
+            raise ValueError(f"quantum must be > 0, got {quantum}")
+        self._classes: Dict[int, _TenantClass] = {}
+        self._total = 0
+        self.tenant_stats: Dict[str, Dict[str, int]] = {}
+
+    def weight(self, tenant: str) -> float:
+        return float(self.weights.get(tenant, 1.0))
+
+    def _tenant_stat(self, tenant: str) -> Dict[str, int]:
+        s = self.tenant_stats.get(tenant)
+        if s is None:
+            s = self.tenant_stats[tenant] = {
+                "submitted": 0, "admitted": 0, "admitted_tokens": 0}
+        return s
+
+    # ------------------------------------------------------- queue hooks
+    def _push(self, request: Request) -> None:
+        cls = self._classes.setdefault(request.priority, _TenantClass())
+        tenant = request.tenant
+        q = cls.queues.get(tenant)
+        if q is None:
+            q = cls.queues[tenant] = deque()
+            cls.deficit.setdefault(tenant, 0.0)
+        if not q and tenant not in cls.rotation:
+            cls.rotation.append(tenant)
+        q.append(request)
+        cls.count += 1
+        self._total += 1
+        self._tenant_stat(tenant)["submitted"] += 1
+
+    def _push_head(self, request: Request) -> None:
+        cls = self._classes.setdefault(request.priority, _TenantClass())
+        cls.head.appendleft(request)
+        cls.count += 1
+        self._total += 1
+
+    def _pop(self) -> Optional[Request]:
+        if self._total == 0:
+            return None
+        for prio in sorted(self._classes, reverse=True):
+            cls = self._classes[prio]
+            if cls.count == 0:
+                continue
+            req = self._pop_class(cls)
+            if req is not None:
+                cls.count -= 1
+                self._total -= 1
+                return req
+        return None
+
+    def _pop_class(self, cls: _TenantClass) -> Optional[Request]:
+        if cls.head:
+            return cls.head.popleft()
+        # DRR: visit tenants in rotation order; each visit adds
+        # quantum*weight credit, and a tenant spends credit equal to the
+        # popped request's token budget. Terminates: every full rotation
+        # strictly grows the richest tenant's deficit past any fixed cost.
+        while cls.rotation:
+            tenant = cls.rotation[0]
+            q = cls.queues.get(tenant)
+            if not q:
+                cls.rotation.popleft()
+                continue
+            cost = float(q[0].max_new_tokens)
+            if cls.deficit[tenant] >= cost:
+                cls.deficit[tenant] -= cost
+                req = q.popleft()
+                if not q:
+                    cls.rotation.popleft()
+                    # an emptied lane forfeits leftover credit — otherwise
+                    # an idle tenant banks unbounded credit and bursts
+                    cls.deficit[tenant] = 0.0
+                stat = self._tenant_stat(tenant)
+                stat["admitted"] += 1
+                stat["admitted_tokens"] += int(cost)
+                return req
+            cls.deficit[tenant] += self.quantum * self.weight(tenant)
+            cls.rotation.rotate(-1)
+        return None
+
+    def _queue_len(self) -> int:
+        return self._total

@@ -34,6 +34,10 @@ Fields:
   further than this many tokens behind the decode loop marks the stream
   ``lagging`` (delivery degrades to catch-up bursts; the loop itself
   never blocks and no token is ever dropped).
+* ``tenant``         — the accounting principal the request bills to.
+  Single-engine tiers ignore it; the multi-replica ``Router`` keys its
+  weighted-fairness scheduler and per-tenant quotas on it. Must be a
+  non-empty string (default ``"default"``).
 """
 from __future__ import annotations
 
@@ -51,6 +55,21 @@ class DeadlineExceeded(Exception):
     def __init__(self, message: str, tokens: Optional[list] = None) -> None:
         super().__init__(message)
         self.tokens = tokens if tokens is not None else []
+
+
+class QuotaExceeded(Exception):
+    """A tenant's outstanding-work quota refused this request at admission.
+
+    Carries the refusing ``tenant`` and a ``retry_after_s`` hint — the
+    router's running estimate of how long until that tenant's oldest
+    outstanding request retires and frees quota.
+    """
+
+    def __init__(self, message: str, *, tenant: str = "default",
+                 retry_after_s: float = 0.0) -> None:
+        super().__init__(message)
+        self.tenant = tenant
+        self.retry_after_s = float(retry_after_s)
 
 
 def _normalize_stop(stop: Any) -> Tuple[Tuple[int, ...], ...]:
@@ -85,6 +104,7 @@ class GenerationConfig:
     deadline_s: Optional[float] = None
     priority: int = 0
     stream_buffer: int = 64
+    tenant: str = "default"
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "max_tokens", int(self.max_tokens))
@@ -110,6 +130,9 @@ class GenerationConfig:
         if self.stream_buffer < 1:
             raise ValueError(
                 f"stream_buffer must be >= 1, got {self.stream_buffer}")
+        if not isinstance(self.tenant, str) or not self.tenant:
+            raise ValueError(
+                f"tenant must be a non-empty string, got {self.tenant!r}")
 
     def merged(self, **overrides: Any) -> "GenerationConfig":
         """A copy with ``overrides`` applied (re-validated)."""

@@ -82,6 +82,7 @@ from repro.serve.batcher import Batcher
 from repro.serve.drafter import Drafter
 from repro.serve.engine import ServeEngine, _step_flags
 from repro.serve.kv_cache import paged_supported, pages_for, PagePool
+from repro.serve.metrics import ServeMetrics
 from repro.serve.request import Request, RequestState, summarize
 from repro.serve.steps import make_fused_paged_suffix_step
 
@@ -458,11 +459,14 @@ class PrefillWorker:
         return (not self._jobs and not self._queue
                 and self.cr.active_count == 0)
 
-    def metrics(self) -> dict:
-        out = dict(self.stats)
+    def metrics(self) -> "ServeMetrics":
+        # canonical flat keys (the pool_* prefix this role used to apply
+        # survives only as deprecated aliases on ServeMetrics)
+        out = summarize(self.retired)
+        out.update(self.stats)
         out["bytes_shipped"] = self.bytes_shipped
-        out.update({f"pool_{k}": v for k, v in self.pool.metrics().items()})
-        return out
+        out.update(self.pool.metrics())
+        return ServeMetrics.from_flat(out)
 
     def _log(self, kind: str, req_id: int, *rest: Any) -> None:
         if self._events is not None:
@@ -724,8 +728,8 @@ class DecodeWorker(ServeEngine):
         if self._ctrl_op is not None:
             self._ctrl_op.cancel()
 
-    def metrics(self) -> dict:
-        out = super().metrics()
+    def _metrics_flat(self) -> dict:
+        out = super()._metrics_flat()
         out.update(self.ingest_stats)
         return out
 
@@ -869,9 +873,15 @@ class DisaggServer:
         return self.retired
 
     # -------------------------------------------------------------- metrics
-    def metrics(self) -> dict:
+    def metrics(self) -> "ServeMetrics":
         out = summarize(self.retired)
         out["disaggregated"] = True
+        out["retired"] = (self.decode.stats["retired"]
+                          + self.prefill.stats["retired"])
+        # headline residency = the decode pool (long-lived KV); per-role
+        # detail stays nested
+        out["pages_in_use"] = self.decode.pool.pages_in_use
+        out["total_pages"] = self.decode.pool.total_pages
         out["decode"] = self.decode.metrics()
         out["prefill"] = self.prefill.metrics()
         out["transport"] = self.transport.stats()
@@ -881,7 +891,7 @@ class DisaggServer:
         out["bytes_shipped"] = self.prefill.bytes_shipped
         out["bytes_shipped_per_request"] = \
             self.prefill.bytes_shipped / jobs if jobs else 0.0
-        return out
+        return ServeMetrics.from_flat(out)
 
     def shutdown(self) -> None:
         self.batcher.close()

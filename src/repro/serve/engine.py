@@ -85,6 +85,7 @@ from repro.models.common import AUDIO, ModelConfig
 from repro.serve.batcher import Batcher
 from repro.serve.drafter import Drafter, NgramDrafter
 from repro.serve.kv_cache import PagePool, paged_supported, pages_for
+from repro.serve.metrics import ServeMetrics
 from repro.serve.request import Request, RequestState, summarize
 from repro.serve.steps import (make_batched_decode_step,
                                make_fused_paged_decode_step,
@@ -904,7 +905,9 @@ class ServeEngine:
                 time.sleep(idle_sleep)
         return self.retired
 
-    def metrics(self) -> dict:
+    def _metrics_flat(self) -> dict:
+        """Flat metrics dict — subclasses extend this before it is
+        wrapped into the typed ``ServeMetrics`` by ``metrics()``."""
         out = summarize(self.retired)
         out.update(self.stats)
         out["paged"] = self.paged
@@ -918,6 +921,9 @@ class ServeEngine:
         if self.paged:
             out.update(self.pool.metrics())
         return out
+
+    def metrics(self) -> ServeMetrics:
+        return ServeMetrics.from_flat(self._metrics_flat())
 
     def shutdown(self) -> None:
         self.batcher.close()

@@ -33,14 +33,42 @@ the slot state it feeds); no locking is needed here.
 from __future__ import annotations
 
 import hashlib
+import warnings
 from functools import partial
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, FrozenSet, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import DENSE, MOE, ModelConfig
+
+
+def prefix_keys(tokens: Any, page_size: int,
+                n_pages: Optional[int] = None) -> List[bytes]:
+    """Chained per-page prefix digests of a token sequence — the content
+    identity the prefix cache (and the router's affinity map) keys on.
+
+    Key ``i`` hashes the sequence's first ``(i+1) * page_size`` tokens via
+    one running sha256 — O(tokens), not O(tokens^2), and
+    content-equivalent to hashing each prefix from scratch. Pure
+    computation: needs no pool (the multi-replica router hashes prompts
+    with it to find which replica already holds the pages), and two
+    callers with the same ``page_size`` always derive the same keys for
+    the same tokens.
+
+    ``n_pages`` defaults to every *full* page of the sequence
+    (``len(tokens) // page_size``).
+    """
+    toks = np.asarray(tokens, np.int32).reshape(-1)
+    if n_pages is None:
+        n_pages = len(toks) // int(page_size)
+    keys: List[bytes] = []
+    h = hashlib.sha256()
+    for i in range(n_pages):
+        h.update(toks[i * page_size:(i + 1) * page_size].tobytes())
+        keys.append(h.digest())
+    return keys
 
 
 @jax.jit
@@ -209,18 +237,19 @@ class PagePool:
         return out
 
     # -------------------------------------------------------- prefix reuse
+    def prefix_keys(self, tokens: Any,
+                    n_pages: Optional[int] = None) -> List[bytes]:
+        """Chained per-page prefix digests at this pool's ``page_size``
+        (see the module-level :func:`prefix_keys`). Pure hash
+        computation — touches no pool state."""
+        return prefix_keys(tokens, self.page_size, n_pages)
+
     def _prefix_keys(self, prompt: Any, n_pages: int) -> List[bytes]:
-        """Chained per-page digests: key ``i`` hashes the prompt's first
-        ``(i+1)*page_size`` tokens via one running sha256 — O(prompt),
-        not O(prompt^2), and content-equivalent to hashing each prefix."""
-        tokens = np.asarray(prompt, np.int32).reshape(-1)
-        keys: List[bytes] = []
-        h = hashlib.sha256()
-        for i in range(n_pages):
-            h.update(tokens[i * self.page_size:
-                            (i + 1) * self.page_size].tobytes())
-            keys.append(h.digest())
-        return keys
+        warnings.warn(
+            "PagePool._prefix_keys is deprecated; use the public "
+            "PagePool.prefix_keys (or serve.kv_cache.prefix_keys)",
+            DeprecationWarning, stacklevel=2)
+        return self.prefix_keys(prompt, n_pages)
 
     def match_prefix(self, prompt: Any) -> List[int]:
         """Longest chain of resident pages covering a page-aligned prompt
@@ -230,18 +259,30 @@ class PagePool:
         the rest of the admission (owned-page alloc) succeeds."""
         n = (len(np.asarray(prompt).reshape(-1)) - 1) // self.page_size
         matched: List[int] = []
-        for key in self._prefix_keys(prompt, n):
+        for key in self.prefix_keys(prompt, n):
             page = self._prefix.get(key)
             if page is None:
                 break
             matched.append(page)
         return matched
 
+    def resident_prefix_len(self, tokens: Any) -> int:
+        """How many leading tokens of ``tokens`` are covered by resident
+        shared pages right now (page-aligned; capped one token short of
+        the full sequence, like :meth:`match_prefix`)."""
+        return len(self.match_prefix(tokens)) * self.page_size
+
+    def prefix_digests(self) -> FrozenSet[bytes]:
+        """Snapshot of every resident prefix digest — what a replica
+        gossips to the router so shared-prefix traffic can be routed to
+        the pool that already holds the pages."""
+        return frozenset(self._prefix)
+
     def register_prefix(self, prompt: Any, table: Sequence[int]) -> None:
         """Index every full prompt page of ``table`` for future sharing
         (first-registration wins; shared pages re-register as no-ops)."""
         n = len(np.asarray(prompt).reshape(-1)) // self.page_size
-        for i, key in enumerate(self._prefix_keys(prompt, n)):
+        for i, key in enumerate(self.prefix_keys(prompt, n)):
             if key not in self._prefix:
                 self._prefix[key] = table[i]
                 self._page_key[table[i]] = key

@@ -1,0 +1,109 @@
+"""Typed serving metrics — one shape for every engine tier.
+
+``ServeEngine``, ``DisaggServer`` and the multi-replica ``Router`` all
+report the same headline metrics, but the key names had drifted (the
+prefill role prefixed its pool counters ``pool_*``; the facade nested
+what the engine flattened). ``ServeMetrics`` is the unification: a typed
+dataclass carrying the headline fields every tier shares, plus an
+``extra`` mapping for tier-specific counters, exposed as a read-only
+``Mapping`` so every existing ``metrics()["key"]`` consumer keeps
+working unchanged.
+
+Back-compat: ``as_dict()`` returns the old plain-dict shape, and legacy
+key aliases (``pool_pages_in_use`` → ``pages_in_use``, …) still resolve
+through ``__getitem__``/``get`` — with a ``DeprecationWarning`` so the
+drifted spellings can eventually be dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from collections.abc import Mapping
+from typing import Any, Dict, Iterator
+
+# drifted spelling -> canonical key. The ``pool_*`` family (the prefill
+# role used to prefix every PagePool counter) is handled structurally in
+# ``_canonical`` so new pool counters don't need enumeration here.
+LEGACY_ALIASES: Dict[str, str] = {
+    "pool_pages_in_use": "pages_in_use",
+    "pool_total_pages": "total_pages",
+    "pool_page_size": "page_size",
+}
+
+# dataclass fields every tier reports (``extra`` carries the rest)
+_TYPED_FIELDS = ("finished", "total_tokens", "ttft_mean", "ttft_p50",
+                 "ttft_p99", "accept_rate", "retired", "pages_in_use",
+                 "total_pages")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeMetrics(Mapping):
+    """Headline serving metrics shared by every engine tier.
+
+    * throughput/latency over finished requests (``summarize``):
+      ``finished``, ``total_tokens``, ``ttft_mean``/``p50``/``p99``,
+      ``accept_rate``;
+    * lifecycle: ``retired``;
+    * KV residency (the leak-check pair): ``pages_in_use``,
+      ``total_pages``.
+
+    Everything tier-specific (step counters, ingest stats, nested role
+    metrics, transport stats, …) lives in ``extra`` and is reachable
+    through the same ``Mapping`` interface — ``metrics()["steps"]``
+    works whether the key is typed or extra.
+    """
+
+    finished: int = 0
+    total_tokens: int = 0
+    ttft_mean: float = 0.0
+    ttft_p50: float = 0.0
+    ttft_p99: float = 0.0
+    accept_rate: float = 0.0
+    retired: int = 0
+    pages_in_use: int = 0
+    total_pages: int = 0
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_flat(cls, data: Dict[str, Any]) -> "ServeMetrics":
+        """Build from a flat metrics dict: typed keys are lifted into
+        fields, the remainder lands in ``extra`` (insertion order
+        preserved for ``as_dict`` round-trips)."""
+        fields = {k: data[k] for k in _TYPED_FIELDS if k in data}
+        extra = {k: v for k, v in data.items() if k not in _TYPED_FIELDS}
+        return cls(extra=extra, **fields)
+
+    # ------------------------------------------------------------ mapping
+    def _canonical(self, key: str) -> str:
+        """Resolve a legacy alias to its canonical key (warning once per
+        call site); unknown keys pass through untouched."""
+        canon = LEGACY_ALIASES.get(key)
+        if canon is None and key.startswith("pool_"):
+            tail = key[len("pool_"):]
+            if tail in _TYPED_FIELDS or tail in self.extra:
+                canon = tail
+        if canon is not None:
+            warnings.warn(
+                f"metrics key {key!r} is deprecated; use {canon!r}",
+                DeprecationWarning, stacklevel=3)
+            return canon
+        return key
+
+    def __getitem__(self, key: str) -> Any:
+        key = self._canonical(key)
+        if key in _TYPED_FIELDS:
+            return getattr(self, key)
+        return self.extra[key]
+
+    def __iter__(self) -> Iterator[str]:
+        yield from _TYPED_FIELDS
+        yield from self.extra
+
+    def __len__(self) -> int:
+        return len(_TYPED_FIELDS) + len(self.extra)
+
+    def as_dict(self) -> Dict[str, Any]:
+        """The legacy plain-dict shape (canonical keys only)."""
+        out = {k: getattr(self, k) for k in _TYPED_FIELDS}
+        out.update(self.extra)
+        return out

@@ -150,6 +150,10 @@ class Request(Completable):
         return self.config.priority
 
     @property
+    def tenant(self) -> str:
+        return self.config.tenant
+
+    @property
     def deadline_time(self) -> Optional[float]:
         """Absolute monotonic deadline (``None`` = no deadline). Derived
         from ``arrival_time`` at read time so load generators that stamp
@@ -206,6 +210,14 @@ class Request(Completable):
     @property
     def remaining(self) -> int:
         return self.config.max_tokens - self.generated
+
+    @property
+    def delivered(self) -> int:
+        """Tokens committed to the output so far (stream-visible; excludes
+        stop-sequence holdback). The failover replay offset: a restarted
+        request re-generates exactly this many tokens before new ones."""
+        with self._deliver_lock:
+            return len(self._out)
 
     # --------------------------------------------------------------- delivery
     def attach_stream(self, stream: Any) -> None:
@@ -287,6 +299,16 @@ class Request(Completable):
             committed.extend(front)
             self._hold = hold[cut:]
         return False
+
+    def rewind_holdback(self) -> int:
+        """Failover support: drop the uncommitted stop-matching tail and
+        return the committed-token count (the replay offset). A request
+        restarted from its prompt regenerates the held-back tokens, which
+        then re-enter ``deliver``'s stop matching from a clean state —
+        replayed delivery stays identical to the uninterrupted run."""
+        with self._deliver_lock:
+            self._hold = []
+            return len(self._out)
 
     def _flush_hold(self) -> None:
         """Commit the holdback tail (no stop match can complete anymore)."""

@@ -1,0 +1,123 @@
+"""The formal engine protocol and the typed metrics mapping:
+``EngineLike`` isinstance over all three tiers (colocated, disagg,
+router), ``ServeClient`` binding to each, ``ServeMetrics`` typed fields,
+Mapping semantics, and deprecated legacy-alias resolution."""
+import warnings
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import Engine
+from repro.models import lm
+from repro.serve import (DisaggServer, EngineLike, GenerationConfig,
+                         Router, ServeClient, ServeEngine, ServeMetrics)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("paper_demo", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+KW = dict(max_batch=2, max_cache_len=64, page_size=4, max_seq_len=48)
+
+
+# ------------------------------------------------------------- protocol
+def test_all_three_tiers_satisfy_enginelike(small_model):
+    cfg, params = small_model
+    tiers = [ServeEngine(cfg, params, paged=True, **KW),
+             DisaggServer(cfg, params, **KW),
+             Router(cfg, params, n_replicas=2, paged=True, **KW)]
+    for tier in tiers:
+        assert isinstance(tier, EngineLike), type(tier).__name__
+        tier.shutdown()
+
+
+def test_non_engines_fail_the_protocol():
+    class Half:
+        def submit(self, request):
+            return request
+
+    assert not isinstance(object(), EngineLike)
+    assert not isinstance(Half(), EngineLike)
+
+
+def test_serve_client_rejects_non_engine():
+    with pytest.raises(TypeError, match="EngineLike"):
+        ServeClient(engine=object())
+
+
+def test_client_binds_to_every_tier(small_model):
+    """One ServeClient, three backends — the streaming front-end runs
+    over each tier unchanged and yields identical greedy tokens."""
+    cfg, params = small_model
+    prompt = list(range(1, 10))
+    results = {}
+    for name, make in [
+            ("colocated", lambda: ServeEngine(cfg, params, paged=True,
+                                              **KW)),
+            ("disagg", lambda: DisaggServer(cfg, params, **KW)),
+            ("router", lambda: Router(cfg, params, n_replicas=2,
+                                      paged=True, **KW))]:
+        with ServeClient(engine=make()) as client:
+            stream = client.generate(prompt,
+                                     GenerationConfig(max_tokens=6))
+            results[name] = list(stream)
+    assert results["colocated"] == results["disagg"] == results["router"]
+    assert len(results["colocated"]) == 6
+
+
+# -------------------------------------------------------------- metrics
+def test_serve_metrics_typed_fields_and_mapping():
+    m = ServeMetrics.from_flat({"finished": 3, "total_tokens": 24,
+                                "pages_in_use": 0, "total_pages": 16,
+                                "custom_counter": 7})
+    assert m.finished == 3 and m["finished"] == 3
+    assert m["custom_counter"] == 7          # untyped keys ride `extra`
+    assert "custom_counter" in m and "nope" not in m
+    d = m.as_dict()
+    assert d["total_tokens"] == 24 and d["custom_counter"] == 7
+    assert len(m) == len(d)
+    assert dict(m) == d                      # Mapping protocol
+
+
+def test_serve_metrics_legacy_aliases_warn():
+    m = ServeMetrics.from_flat({"pages_in_use": 2, "total_pages": 8,
+                                "page_size": 4})
+    with pytest.deprecated_call():
+        assert m["pool_pages_in_use"] == 2
+    with pytest.deprecated_call():
+        assert m["pool_total_pages"] == 8
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert m["pages_in_use"] == 2        # canonical key: no warning
+
+
+def test_every_tier_returns_serve_metrics(small_model):
+    cfg, params = small_model
+    engine = Engine()
+    tiers = [ServeEngine(cfg, params, paged=True, engine=engine, **KW),
+             DisaggServer(cfg, params, **KW)]
+    for tier in tiers:
+        m = tier.metrics()
+        assert isinstance(m, ServeMetrics)
+        assert m["finished"] == 0
+        tier.shutdown()
+
+
+def test_metrics_reject_unknown_key():
+    m = ServeMetrics.from_flat({"finished": 1})
+    with pytest.raises(KeyError):
+        m["no_such_metric"]
+
+
+def test_tenant_config_validation():
+    cfg = GenerationConfig(max_tokens=4, tenant="acme")
+    assert cfg.tenant == "acme"
+    assert GenerationConfig(max_tokens=4).tenant == "default"
+    with pytest.raises(ValueError):
+        GenerationConfig(max_tokens=4, tenant="")
+    with pytest.raises(ValueError):
+        GenerationConfig(max_tokens=4, tenant=123)

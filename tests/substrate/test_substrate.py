@@ -241,3 +241,77 @@ def test_checkpoint_commit_stage_error_surfaces(tmp_path, engine):
         os.rename = orig_rename
         ckpt.close()
     assert ckpt.latest_step() is None      # nothing committed
+
+
+def test_heartbeat_dead_on_arrival(engine):
+    """Regression: ``last_seen`` used to be seeded at construction time,
+    vouching for ranks the monitor had never heard from. A rank that
+    never beats ONCE must still be flagged one timeout after watch-start,
+    and ``last_seen`` must never contain a fabricated entry for it."""
+    tr = Transport(2, engine=engine)
+    failures = []
+    mon = HeartbeatMonitor(tr, engine, rank=0, watched=[1],
+                           timeout_s=0.05, sweep_interval_s=0.01,
+                           on_failure=failures.append)
+    deadline = time.monotonic() + 3.0
+    while not failures and time.monotonic() < deadline:
+        mon.progress()
+        time.sleep(0.005)
+    mon.stop()
+    assert failures == [1]
+    assert 1 not in mon.last_seen          # never fabricated a beat
+
+
+def test_heartbeat_watch_unwatch(engine):
+    """Elastic shrink: an unwatched rank's silence never fires
+    on_failure; re-watching restarts its silence clock from now."""
+    tr = Transport(3, engine=engine)
+    failures = []
+    mon = HeartbeatMonitor(tr, engine, rank=0, watched=[1, 2],
+                           timeout_s=0.05, sweep_interval_s=0.01,
+                           on_failure=failures.append)
+    assert mon.watched == [1, 2]
+    mon.unwatch(2)
+    assert mon.watched == [1]
+    hb = HeartbeatSender(tr, 1, 0, interval_s=0.005)
+    deadline = time.monotonic() + 0.3
+    while time.monotonic() < deadline:
+        hb.beat()
+        mon.progress()
+        time.sleep(0.005)
+    assert failures == []                  # 2 silent but unwatched
+    # re-watch 2: silence restarts now, flagged one timeout later
+    mon.watch(2)
+    deadline = time.monotonic() + 3.0
+    while not failures and time.monotonic() < deadline:
+        hb.beat()
+        mon.progress()
+        time.sleep(0.005)
+    mon.stop()
+    assert failures == [2]
+
+
+def test_heartbeat_stall_guard(engine):
+    """With ``stall_guard_s`` set, a long gap between sweeps (the driver
+    thread stalled — e.g. jit compiling) restarts silence clocks instead
+    of flagging ranks whose beats could not be observed."""
+    tr = Transport(2, engine=engine)
+    failures = []
+    mon = HeartbeatMonitor(tr, engine, rank=0, watched=[1],
+                           timeout_s=0.05, sweep_interval_s=0.01,
+                           on_failure=failures.append,
+                           stall_guard_s=0.05)
+    hb = HeartbeatSender(tr, 1, 0, interval_s=0.005)
+    hb.beat()
+    mon.progress()
+    time.sleep(0.2)                        # driver stalls >> timeout
+    hb.beat()
+    mon.progress()                         # stalled sweep: resets clocks
+    assert failures == []
+    # rank 1 now goes genuinely silent; regular sweeps flag it
+    deadline = time.monotonic() + 3.0
+    while not failures and time.monotonic() < deadline:
+        mon.progress()
+        time.sleep(0.005)
+    mon.stop()
+    assert failures == [1]
