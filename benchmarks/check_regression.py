@@ -22,6 +22,16 @@ ones. Refresh the file after an intentional perf change with::
     python benchmarks/check_regression.py --update
 
 and commit the result.
+
+**Variance-aware gating**: ``run.py`` measures every serve scenario
+``--samples`` times and embeds per-metric ``variance`` fields
+(mean/cv/ci95) in BENCH_serve.json; ``--update`` snapshots each gated
+metric's coefficient of variation next to its value. A metric whose
+*committed* cv exceeds ``UNSTABLE_CV`` is flagged ``unstable`` and
+recorded-only — enforcing a floor on a metric that swings more than
+15% run-to-run produces alert fatigue, not protection. The decision
+uses the committed cv (deterministic in CI), while the current run's
+cv is displayed so drift toward instability is visible before it bites.
 """
 from __future__ import annotations
 
@@ -32,6 +42,9 @@ from pathlib import Path
 from typing import Dict, Optional
 
 DEFAULT_TOLERANCE = 0.25
+# mirror of repro.bench.stats.UNSTABLE_CV — this script must run without
+# PYTHONPATH=src (CI calls it with the system python path)
+UNSTABLE_CV = 0.15
 
 # metric name -> (how to pull it out of BENCH_serve.json, tolerance).
 # Tolerances: 0.25 absorbs CI-runner noise on stable ratios; the two
@@ -89,6 +102,30 @@ GATED = {
     # and the floor sits just above the 0.8 design target.
     "router_affinity_hit_rate": (
         lambda d: d["router"]["affinity_hit_rate"], 0.035),
+}
+
+# metric name -> where its coefficient of variation lives in the
+# bench file's per-block ``variance`` fields (written by run.py when
+# --samples > 1). Metrics absent here are deterministic by construction
+# (router affinity is a counting argument; spec accept rate is a seeded
+# token comparison) and never flagged unstable.
+CV = {
+    "continuous_vs_static_tokens_per_s":
+        lambda d: d["variance"]["speedup_tokens_per_s"]["cv"],
+    "continuous_vs_static_ttft_p99":
+        lambda d: d["variance"]["ttft_p99_ratio"]["cv"],
+    "paged_vs_dense_effective_batch":
+        lambda d: d["paged"]["variance"]["effective_batch_ratio"]["cv"],
+    "paged_vs_dense_tokens_per_s":
+        lambda d: d["paged"]["variance"]["speedup_tokens_per_s"]["cv"],
+    "spec_vs_paged_tokens_per_s":
+        lambda d: d["spec"]["variance"]["speedup_tokens_per_s"]["cv"],
+    "stream_vs_batch_ttft":
+        lambda d: d["stream"]["variance"]["ttft_speedup"]["cv"],
+    "stream_vs_batch_tokens_per_s":
+        lambda d: d["stream"]["variance"]["tokens_per_s_ratio"]["cv"],
+    "await_vs_raw_notify_latency":
+        lambda d: d["api"]["variance"]["raw_vs_await_ratio"]["cv"],
 }
 
 # gates enforced only when their predicate holds for this run's
@@ -150,21 +187,38 @@ def extract(doc: dict) -> Dict[str, float]:
     return out
 
 
+def extract_cv(doc: dict) -> Dict[str, float]:
+    """Per-gated-metric coefficient of variation from this run, where
+    the bench file carries variance fields (single-sample runs do not)."""
+    out = {}
+    for name, fn in CV.items():
+        try:
+            cv = fn(doc)
+            if cv is not None:
+                out[name] = float(cv)
+        except (KeyError, TypeError):
+            pass
+    return out
+
+
 def update_baselines(doc: dict, path: Path) -> None:
     old = {}
     if path.exists():
         old = json.loads(path.read_text())
+    cvs = extract_cv(doc)
     metrics = {}
     for name, (fn, default_tol) in GATED.items():
-        tol = old.get("metrics", {}).get(name, {}).get(
-            "tolerance", default_tol)
+        old_entry = old.get("metrics", {}).get(name, {})
+        tol = old_entry.get("tolerance", default_tol)
         if name in CONDITIONAL and not CONDITIONAL[name][0](doc):
             # exempt on this runner: keep the committed baseline (set on
             # a runner where the condition held) rather than overwrite it
             # with a value the gate would never have checked
-            value = old.get("metrics", {}).get(name, {}).get(
-                "value", CONDITIONAL[name][1])
-            metrics[name] = {"value": value, "tolerance": tol}
+            value = old_entry.get("value", CONDITIONAL[name][1])
+            entry = {"value": value, "tolerance": tol}
+            if old_entry.get("cv") is not None:
+                entry["cv"] = old_entry["cv"]
+            metrics[name] = entry
             continue
         try:
             value = round(float(fn(doc)), 4)
@@ -173,7 +227,10 @@ def update_baselines(doc: dict, path: Path) -> None:
                 f"--update refuses a partial benchmark file: metric "
                 f"{name!r} is not extractable (run the full --quick "
                 f"sweep first)")
-        metrics[name] = {"value": value, "tolerance": tol}
+        entry = {"value": value, "tolerance": tol}
+        if name in cvs:
+            entry["cv"] = round(cvs[name], 4)
+        metrics[name] = entry
     recorded = {name: round(float(fn(doc)), 2)
                 for name, fn in RECORDED.items()}
     path.write_text(json.dumps({
@@ -190,7 +247,8 @@ def update_baselines(doc: dict, path: Path) -> None:
 def check(doc: dict, baselines: dict,
           summary_path: Optional[str] = None) -> int:
     current = extract(doc)
-    rows = []
+    current_cv = extract_cv(doc)
+    rows = []  # (name, base, floor, got, cv_shown, status)
     failed = []
     # a metric gated in code but absent from the committed baselines
     # would otherwise silently not be compared at all
@@ -203,6 +261,11 @@ def check(doc: dict, baselines: dict,
         base, tol = entry["value"], entry.get("tolerance",
                                               DEFAULT_TOLERANCE)
         floor = base * (1.0 - tol)
+        # display this run's cv when the bench file has one, else the
+        # committed snapshot; the unstable *decision* below always uses
+        # the committed cv so CI verdicts don't depend on run-to-run luck
+        base_cv = entry.get("cv")
+        cv_shown = current_cv.get(name, base_cv)
         exempt = (name in CONDITIONAL
                   and not CONDITIONAL[name][0](doc))
         if exempt:
@@ -210,7 +273,16 @@ def check(doc: dict, baselines: dict,
             # of the real Pallas kernel): report the measured value when
             # available but never gate on it
             rows.append((name, base, floor,
-                         current.get(name, float("nan")), None))
+                         current.get(name, float("nan")), cv_shown,
+                         "exempt"))
+            continue
+        if base_cv is not None and base_cv > UNSTABLE_CV:
+            # metric swings too much run-to-run on the baseline runner:
+            # recorded-only until an --update on a quieter measurement
+            # brings its cv back under the threshold
+            rows.append((name, base, floor,
+                         current.get(name, float("nan")), cv_shown,
+                         "unstable"))
             continue
         if name not in current:
             failed.append(f"{name}: in baselines but not extractable "
@@ -218,29 +290,40 @@ def check(doc: dict, baselines: dict,
             continue
         got = current[name]
         ok = got >= floor
-        rows.append((name, base, floor, got, ok))
+        rows.append((name, base, floor, got, cv_shown,
+                     "ok" if ok else "REGRESSED"))
         if not ok:
             failed.append(f"{name}: {got:.3f} < floor {floor:.3f} "
                           f"(baseline {base:.3f}, tolerance {tol:.0%})")
 
+    def _cv_txt(cv):
+        return "-" if cv is None else f"{cv:.3f}"
+
     header = f"{'metric':<38} {'baseline':>9} {'floor':>8} " \
-             f"{'current':>8}  status"
+             f"{'current':>8} {'cv':>6}  status"
     lines = [header, "-" * len(header)]
-    for name, base, floor, got, ok in rows:
-        status = "exempt" if ok is None else ("ok" if ok else "REGRESSED")
+    for name, base, floor, got, cv, status in rows:
         lines.append(f"{name:<38} {base:>9.3f} {floor:>8.3f} "
-                     f"{got:>8.3f}  {status}")
+                     f"{got:>8.3f} {_cv_txt(cv):>6}  {status}")
     print("\n".join(lines))
+    n_unstable = sum(1 for r in rows if r[5] == "unstable")
+    if n_unstable:
+        print(f"note: {n_unstable} metric(s) recorded-only (committed "
+              f"cv > {UNSTABLE_CV:.2f}); re-measure and --update on a "
+              "quiet runner to re-arm their gates")
 
     if summary_path:
         md = ["### serve benchmark regression gate", "",
-              "| metric | baseline | floor | current | status |",
-              "| --- | ---: | ---: | ---: | --- |"]
-        for name, base, floor, got, ok in rows:
-            status = "➖ exempt" if ok is None else \
-                ("✅" if ok else "❌ regressed")
+              "| metric | baseline | floor | current | cv | status |",
+              "| --- | ---: | ---: | ---: | ---: | --- |"]
+        badge = {"exempt": "➖ exempt", "unstable": "🌀 unstable",
+                 "ok": "✅", "REGRESSED": "❌ regressed"}
+        for name, base, floor, got, cv, status in rows:
             md.append(f"| {name} | {base:.3f} | {floor:.3f} | {got:.3f} "
-                      f"| {status} |")
+                      f"| {_cv_txt(cv)} | {badge[status]} |")
+        if n_unstable:
+            md += ["", f"🌀 = committed cv > {UNSTABLE_CV:.2f}: "
+                   "recorded-only, not gated."]
         with open(summary_path, "a") as f:
             f.write("\n".join(md) + "\n")
 

@@ -51,12 +51,33 @@ import numpy as np
 
 ROWS: List[str] = []
 QUICK = False
+SAMPLES = 3          # measured samples per serve scenario (--samples)
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.3f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def _append_block(block: str, payload: dict) -> None:
+    """Merge one block into BENCH_serve.json (bench_serve creates it)."""
+    try:
+        with open("BENCH_serve.json") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        doc = {}
+    doc[block] = payload
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# appended {block} block to BENCH_serve.json", flush=True)
+
+
+def _variance(samples: List[dict]) -> dict:
+    """Per-metric {mean, cv, ci95, values} over per-sample dicts — the
+    fields the variance-aware regression gate reads."""
+    from repro.bench.stats import variance_fields
+    return variance_fields(samples)
 
 
 def _timeit(fn: Callable, n: int, warmup: int = 1) -> float:
@@ -479,12 +500,22 @@ def _serve_workload(n_requests: int, n_slots: int):
 def bench_serve() -> None:
     """Continuation-driven continuous batching vs synchronous static
     batching built on the same jitted prefill/decode steps (the
-    ``greedy_generate`` loop, compile-warmed for fairness)."""
+    ``greedy_generate`` loop, compile-warmed for fairness).
+
+    The continuous side is driven through the ``repro.bench`` harness —
+    the same bursty workload frozen into a seeded ``Trace`` and replayed
+    ``SAMPLES`` times by a ``Replayer`` over the real ``ServeClient``
+    streaming surface — so the headline ratios carry variance fields
+    (mean/cv/ci95) instead of a single roll of the load dice.
+    """
+    import random as pyrandom
+
     import jax
     import jax.numpy as jnp
+    from repro.bench import Replayer, Trace, TraceRequest
     from repro.configs import get_config
     from repro.models import lm
-    from repro.serve import Request, ServeEngine
+    from repro.serve import ServeEngine
     from repro.serve.request import _percentile
     from repro.serve.steps import make_decode_step, make_prefill_step
 
@@ -493,41 +524,26 @@ def bench_serve() -> None:
     n_slots, prompt_len, cache_len = 4, 8, 64
     n_requests = 8 if QUICK else 16
     lengths, arrivals = _serve_workload(n_requests, n_slots)
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (n_requests, prompt_len), 0, cfg.vocab_size)
+    seed = 1
+    prng = pyrandom.Random(seed)
+    trace = Trace(
+        requests=tuple(TraceRequest(
+            arrival_s=arrivals[i],
+            prompt=tuple(prng.randrange(cfg.vocab_size)
+                         for _ in range(prompt_len)),
+            max_tokens=lengths[i]) for i in range(n_requests)),
+        meta={"name": "serve_burst", "seed": seed,
+              "vocab_size": cfg.vocab_size})
+    prompts = jnp.asarray([list(r.prompt) for r in trace.requests],
+                          dtype=jnp.int32)
     useful_tokens = sum(lengths)
 
-    # ---- continuous batching (continuation-driven) ----
+    # ---- continuous batching (continuation-driven), via the harness ----
     # dense slots: this block isolates the scheduling win; the memory win
     # is measured separately by bench_serve_paged (dense vs paged pool)
-    serve = ServeEngine(cfg, params, max_batch=n_slots,
-                        max_cache_len=cache_len, paged=False)
-    # warm the compile caches on the same engine instance
-    warm = [Request(prompts[0], 2), Request(prompts[1], 2)]
-    for r in warm:
-        serve.submit(r)
-    serve.run(until=lambda: len(serve.retired) == 2, timeout=120)
-
-    reqs = [Request(prompts[i], lengths[i]) for i in range(n_requests)]
-    t0 = time.monotonic()
-
-    def submitter():
-        for req, dt in zip(reqs, arrivals):
-            now = time.monotonic() - t0
-            if dt > now:
-                time.sleep(dt - now)
-            req.arrival_time = time.monotonic()
-            serve.submit(req)
-
-    sub = threading.Thread(target=submitter)
-    sub.start()
-    serve.run(until=lambda: len(serve.retired) == 2 + n_requests,
-              timeout=300)
-    sub.join()
-    cont_makespan = max(r.finish_time for r in reqs) - t0
-    cont_tps = useful_tokens / cont_makespan
-    cont_ttft = sorted(r.ttft for r in reqs)
-    serve.shutdown()
+    replayer = Replayer(ServeEngine(cfg, params, max_batch=n_slots,
+                                    max_cache_len=cache_len, paged=False),
+                        name="continuous")
 
     # ---- static batching (synchronous greedy_generate loop) ----
     prefill = jax.jit(make_prefill_step(cfg, cache_len))
@@ -545,26 +561,29 @@ def bench_serve() -> None:
         return jnp.stack(out, axis=1)
 
     jax.block_until_ready(static_generate(prompts[:n_slots], 2))  # warm
-    t0 = time.monotonic()
-    static_ttft = []
-    done = 0
-    while done < n_requests:
-        now = time.monotonic() - t0
-        ready = [i for i in range(done, n_requests) if arrivals[i] <= now]
-        if not ready:
-            time.sleep(1e-3)
-            continue
-        batch = ready[:n_slots]
-        idx = list(batch) + [batch[-1]] * (n_slots - len(batch))  # pad batch
-        n_steps = max(lengths[i] for i in batch)
-        out = static_generate(prompts[jnp.asarray(idx)], n_steps)
-        jax.block_until_ready(out)       # synchronous: block per batch
-        t_end = time.monotonic() - t0
-        # tokens observable only when the whole batch finishes
-        static_ttft.extend(t_end - arrivals[i] for i in batch)
-        done += len(batch)
-    static_makespan = time.monotonic() - t0
-    static_tps = useful_tokens / static_makespan
+
+    def static_trial():
+        """One paced pass of the synchronous loop over the trace."""
+        t0 = time.monotonic()
+        static_ttft = []
+        done = 0
+        while done < n_requests:
+            now = time.monotonic() - t0
+            ready = [i for i in range(done, n_requests)
+                     if arrivals[i] <= now]
+            if not ready:
+                time.sleep(1e-3)
+                continue
+            batch = ready[:n_slots]
+            idx = list(batch) + [batch[-1]] * (n_slots - len(batch))  # pad
+            n_steps = max(lengths[i] for i in batch)
+            out = static_generate(prompts[jnp.asarray(idx)], n_steps)
+            jax.block_until_ready(out)   # synchronous: block per batch
+            t_end = time.monotonic() - t0
+            # tokens observable only when the whole batch finishes
+            static_ttft.extend(t_end - arrivals[i] for i in batch)
+            done += len(batch)
+        return time.monotonic() - t0, static_ttft
 
     def p99(vals):
         return _percentile(sorted(vals), 0.99)
@@ -572,25 +591,70 @@ def bench_serve() -> None:
     def p50(vals):
         return _percentile(sorted(vals), 0.50)
 
-    emit("serve.continuous_batching", cont_makespan / useful_tokens * 1e6,
-         f"{cont_tps:.0f}_tok_per_s_ttft_p99_{p99(cont_ttft) * 1e3:.0f}ms")
-    emit("serve.static_greedy", static_makespan / useful_tokens * 1e6,
-         f"{static_tps:.0f}_tok_per_s_ttft_p99_{p99(static_ttft) * 1e3:.0f}ms")
-    emit("serve.speedup", 0.0, f"{cont_tps / static_tps:.3f}x")
+    static_trial()   # throwaway: full-trace Python-dispatch warm
+
+    # interleave continuous/static samples (alternating order per sample)
+    # so machine-load drift hits both variants alike; every sample of each
+    # feeds the variance fields the regression gate reads
+    cont_results, static_results = [], []
+    for s in range(SAMPLES):
+        pair = [lambda: cont_results.extend(replayer.run(trace, samples=1)),
+                lambda: static_results.append(static_trial())]
+        for f in (pair if s % 2 == 0 else reversed(pair)):
+            f()
+    replayer.close()
+
+    per_sample = []
+    for res, (s_mk, s_ttft) in zip(cont_results, static_results):
+        m = res.metrics()
+        s_tps = useful_tokens / s_mk
+        per_sample.append({
+            "continuous_tokens_per_s": m["tokens_per_s"],
+            "continuous_makespan_s": m["makespan_s"],
+            "continuous_ttft_p50_s": m["ttft_p50_s"],
+            "continuous_ttft_p99_s": m["ttft_p99_s"],
+            "static_tokens_per_s": s_tps,
+            "static_makespan_s": s_mk,
+            "static_ttft_p50_s": p50(s_ttft),
+            "static_ttft_p99_s": p99(s_ttft),
+            "speedup_tokens_per_s": m["tokens_per_s"] / s_tps,
+            "ttft_p99_ratio": p99(s_ttft) / m["ttft_p99_s"],
+        })
+    var = _variance(per_sample)
+
+    def mean(key):
+        return var[key]["mean"]
+
+    emit("serve.continuous_batching",
+         mean("continuous_makespan_s") / useful_tokens * 1e6,
+         f"{mean('continuous_tokens_per_s'):.0f}_tok_per_s_ttft_p99_"
+         f"{mean('continuous_ttft_p99_s') * 1e3:.0f}ms")
+    emit("serve.static_greedy",
+         mean("static_makespan_s") / useful_tokens * 1e6,
+         f"{mean('static_tokens_per_s'):.0f}_tok_per_s_ttft_p99_"
+         f"{mean('static_ttft_p99_s') * 1e3:.0f}ms")
+    emit("serve.speedup", 0.0,
+         f"{mean('speedup_tokens_per_s'):.3f}x_cv_"
+         f"{var['speedup_tokens_per_s']['cv']:.3f}")
     with open("BENCH_serve.json", "w") as f:
         json.dump({
             "workload": {"n_requests": n_requests, "n_slots": n_slots,
                          "prompt_len": prompt_len, "lengths": lengths,
-                         "arrivals_s": arrivals},
-            "continuous": {"tokens_per_s": cont_tps,
-                           "makespan_s": cont_makespan,
-                           "ttft_p50_s": p50(cont_ttft),
-                           "ttft_p99_s": p99(cont_ttft)},
-            "static_greedy": {"tokens_per_s": static_tps,
-                              "makespan_s": static_makespan,
-                              "ttft_p50_s": p50(static_ttft),
-                              "ttft_p99_s": p99(static_ttft)},
-            "speedup_tokens_per_s": cont_tps / static_tps,
+                         "arrivals_s": arrivals, "trace_seed": seed,
+                         "trace_name": trace.name},
+            "samples": SAMPLES,
+            "continuous": {
+                "tokens_per_s": mean("continuous_tokens_per_s"),
+                "makespan_s": mean("continuous_makespan_s"),
+                "ttft_p50_s": mean("continuous_ttft_p50_s"),
+                "ttft_p99_s": mean("continuous_ttft_p99_s")},
+            "static_greedy": {
+                "tokens_per_s": mean("static_tokens_per_s"),
+                "makespan_s": mean("static_makespan_s"),
+                "ttft_p50_s": mean("static_ttft_p50_s"),
+                "ttft_p99_s": mean("static_ttft_p99_s")},
+            "speedup_tokens_per_s": mean("speedup_tokens_per_s"),
+            "variance": var,
         }, f, indent=2)
     print("# wrote BENCH_serve.json", flush=True)
 
@@ -643,16 +707,23 @@ def bench_serve_paged() -> None:
     warm_prompts = jax.random.randint(jax.random.PRNGKey(4),
                                       (2, prompt_len), 0, cfg.vocab_size)
 
-    def run_variant(**engine_kwargs):
+    def make_engine(**engine_kwargs):
         serve = ServeEngine(cfg, params, **engine_kwargs)
         warm = [Request(warm_prompts[0], 2),
                 Request(jnp.concatenate([warm_prompts[0][:shared_len],
                                          warm_prompts[1][shared_len:]]), 2)]
         for r in warm:                      # warms prefill+decode+suffix
             serve.submit(r)
-        serve.run(until=lambda: len(serve.retired) == 2, timeout=120)
-        # drop warm-phase counters so the reported metrics (including the
-        # one deliberate warm prefix hit) reflect only the measured trace
+        serve._bench_done = len(warm)
+        serve.run(until=lambda: len(serve.retired) == serve._bench_done,
+                  timeout=120)
+        return serve
+
+    def measure(serve):
+        # drop prior-phase counters (warmup, earlier samples) so the
+        # reported metrics reflect only this sample's trace — released
+        # pages fall out of the prefix index, so every sample sees the
+        # same one-cold-miss-per-run structure
         serve.stats.update(max_active=0, deferred=0)
         if serve.paged:
             serve.pool.stats.update(prefix_hits=0, prefix_tokens_reused=0,
@@ -671,7 +742,8 @@ def bench_serve_paged() -> None:
 
         sub = threading.Thread(target=submitter)
         sub.start()
-        serve.run(until=lambda: len(serve.retired) == 2 + n_requests,
+        serve._bench_done += n_requests
+        serve.run(until=lambda: len(serve.retired) == serve._bench_done,
                   timeout=300)
         sub.join()
         makespan = max(r.finish_time for r in reqs) - t0
@@ -689,14 +761,39 @@ def bench_serve_paged() -> None:
                                           "prefix_tokens_reused",
                                           "peak_in_use", "total_pages",
                                           "page_size", "deferred")})
-        serve.shutdown()
         return out
 
-    dense = run_variant(max_batch=dense_slots, max_cache_len=dense_cache_len,
-                        paged=False)
-    paged = run_variant(max_batch=paged_slots, max_cache_len=dense_cache_len,
-                        paged=True, page_size=page_size,
-                        max_seq_len=max_seq, total_pages=total_pages)
+    # interleave dense/paged samples (alternating order) so load drift
+    # hits both variants alike; headline dicts keep the best (min
+    # makespan) sample, the variance fields carry all of them
+    dense_eng = make_engine(max_batch=dense_slots,
+                            max_cache_len=dense_cache_len, paged=False)
+    paged_eng = make_engine(max_batch=paged_slots,
+                            max_cache_len=dense_cache_len, paged=True,
+                            page_size=page_size, max_seq_len=max_seq,
+                            total_pages=total_pages)
+    dense = paged = None
+    per_sample = []
+    for rep in range(SAMPLES):
+        if rep % 2 == 0:
+            d, p = measure(dense_eng), measure(paged_eng)
+        else:
+            p, d = measure(paged_eng), measure(dense_eng)
+        per_sample.append({
+            "dense_tokens_per_s": d["tokens_per_s"],
+            "paged_tokens_per_s": p["tokens_per_s"],
+            "speedup_tokens_per_s":
+                p["tokens_per_s"] / d["tokens_per_s"],
+            "effective_batch_ratio":
+                p["effective_batch"] / d["effective_batch"],
+        })
+        if dense is None or d["makespan_s"] < dense["makespan_s"]:
+            dense = d
+        if paged is None or p["makespan_s"] < paged["makespan_s"]:
+            paged = p
+    dense_eng.shutdown()
+    paged_eng.shutdown()
+    var = _variance(per_sample)
 
     emit("serve.paged.dense_baseline",
          dense["makespan_s"] / useful_tokens * 1e6,
@@ -711,25 +808,19 @@ def bench_serve_paged() -> None:
     emit("serve.paged.speedup", 0.0,
          f"{paged['tokens_per_s'] / dense['tokens_per_s']:.3f}x")
 
-    try:
-        with open("BENCH_serve.json") as f:
-            doc = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        doc = {}
-    doc["paged"] = {
+    _append_block("paged", {
         "workload": {"n_requests": n_requests, "prompt_len": prompt_len,
                      "shared_prefix_len": shared_len, "lengths": lengths,
                      "arrivals_s": arrivals,
                      "cached_tokens_budget": dense_slots * dense_cache_len},
+        "samples": SAMPLES,
         "dense": dense, "paged": paged,
         "effective_batch_ratio":
             paged["effective_batch"] / dense["effective_batch"],
         "speedup_tokens_per_s":
             paged["tokens_per_s"] / dense["tokens_per_s"],
-    }
-    with open("BENCH_serve.json", "w") as f:
-        json.dump(doc, f, indent=2)
-    print("# appended paged block to BENCH_serve.json", flush=True)
+        "variance": var,
+    })
 
 
 # ==================== fused paged-attention kernel vs unfused steps
@@ -760,7 +851,7 @@ def bench_serve_kernel() -> None:
     n_requests = 6 if QUICK else 12
     n_slots, page_size, prompt_len, max_seq = 4, 8, 16, 64
     length = 24
-    repeats = 3
+    repeats = max(3, SAMPLES)
     useful_tokens = n_requests * length
 
     def make_engine(fused):
@@ -810,13 +901,18 @@ def bench_serve_kernel() -> None:
 
     fused_eng, unfused_eng = make_engine(True), make_engine(False)
     fused_best = unfused_best = None
+    per_rep = []
     for rep in range(repeats):   # interleave so load drift hits both
         if rep % 2 == 0:
             f, u = trial(fused_eng, rep), trial(unfused_eng, rep)
         else:
             u, f = trial(unfused_eng, rep), trial(fused_eng, rep)
+        per_rep.append({"fused_tokens_per_s": useful_tokens / f,
+                        "unfused_tokens_per_s": useful_tokens / u,
+                        "speedup_tokens_per_s": u / f})
         fused_best = f if fused_best is None else min(fused_best, f)
         unfused_best = u if unfused_best is None else min(unfused_best, u)
+    var = _variance(per_rep)
 
     fused_cost = step_cost(fused_eng)
     unfused_cost = step_cost(unfused_eng)
@@ -837,16 +933,12 @@ def bench_serve_kernel() -> None:
              f"{fused_cost['bytes_accessed'] / unfused_cost['bytes_accessed']:.3f}"
              "x_fused_vs_unfused")
 
-    try:
-        with open("BENCH_serve.json") as f:
-            doc = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        doc = {}
-    doc["kernel"] = {
+    _append_block("kernel", {
         "workload": {"n_requests": n_requests, "n_slots": n_slots,
                      "prompt_len": prompt_len, "length": length,
                      "page_size": page_size, "max_seq_len": max_seq,
                      "repeats_best_of": repeats},
+        "samples": repeats,
         "fused_kernel_active": active,
         "fused": {"tokens_per_s": fused_tps, "makespan_s": fused_best,
                   "step_cost": fused_cost},
@@ -854,10 +946,8 @@ def bench_serve_kernel() -> None:
                     "makespan_s": unfused_best,
                     "step_cost": unfused_cost},
         "speedup_tokens_per_s": fused_tps / unfused_tps,
-    }
-    with open("BENCH_serve.json", "w") as f:
-        json.dump(doc, f, indent=2)
-    print("# appended kernel block to BENCH_serve.json", flush=True)
+        "variance": var,
+    })
 
 
 # ========================= beyond paper: self-speculative decoding
@@ -882,7 +972,7 @@ def bench_serve_spec() -> None:
     n_requests = 6 if QUICK else 10
     n_slots, page_size, prompt_len, max_seq = 4, 8, 16, 64
     speculate, length = 4, 48
-    repeats = 3
+    repeats = max(3, SAMPLES)
     motif = np_.array([5, 11, 3, 7])
     useful_tokens = n_requests * length
 
@@ -945,13 +1035,18 @@ def bench_serve_spec() -> None:
     # each variant's best repeat
     base_eng, spec_eng = make_engine(0), make_engine(speculate)
     base_best = spec_best = None
+    per_rep = []
     for rep in range(repeats):
         if rep % 2 == 0:
             b, s = trial(base_eng, rep), trial(spec_eng, rep)
         else:
             s, b = trial(spec_eng, rep), trial(base_eng, rep)
+        per_rep.append({"baseline_tokens_per_s": useful_tokens / b,
+                        "spec_tokens_per_s": useful_tokens / s,
+                        "speedup_tokens_per_s": b / s})
         base_best = b if base_best is None else min(base_best, b)
         spec_best = s if spec_best is None else min(spec_best, s)
+    var = _variance(per_rep)
     base = summarize_variant(base_eng, base_best)
     spec = summarize_variant(spec_eng, spec_best)
 
@@ -968,24 +1063,18 @@ def bench_serve_spec() -> None:
     emit("serve.spec.speedup", 0.0,
          f"{spec['tokens_per_s'] / base['tokens_per_s']:.3f}x")
 
-    try:
-        with open("BENCH_serve.json") as f:
-            doc = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        doc = {}
-    doc["spec"] = {
+    _append_block("spec", {
         "workload": {"n_requests": n_requests, "n_slots": n_slots,
                      "prompt_len": prompt_len, "length": length,
                      "page_size": page_size, "max_seq_len": max_seq,
                      "speculate": speculate, "repeats_best_of": repeats},
+        "samples": repeats,
         "paged_baseline": base,
         "speculative": spec,
         "speedup_tokens_per_s":
             spec["tokens_per_s"] / base["tokens_per_s"],
-    }
-    with open("BENCH_serve.json", "w") as f:
-        json.dump(doc, f, indent=2)
-    print("# appended spec block to BENCH_serve.json", flush=True)
+        "variance": var,
+    })
 
 
 # ===================== beyond paper: streaming session API (per-token)
@@ -1025,7 +1114,7 @@ def bench_serve_stream() -> None:
     n_requests = n_slots = 4
     prompt_len, length = 8, 32
     max_seq = prompt_len + length
-    repeats = 3 if QUICK else 5
+    repeats = max(3 if QUICK else 5, SAMPLES)
     prompts = jax.random.randint(jax.random.PRNGKey(5),
                                  (n_requests, prompt_len), 0, cfg.vocab_size)
     useful_tokens = n_requests * length
@@ -1085,6 +1174,7 @@ def bench_serve_stream() -> None:
     stream_client = ServeClient(engine=make_engine())
     batch_best = stream_best = None
     batch_first, stream_ttfts, stream_gaps = [], [], []
+    per_rep = []
     for rep in range(repeats):
         if rep % 2 == 0:
             b = batch_trial(batch_eng)
@@ -1092,10 +1182,16 @@ def bench_serve_stream() -> None:
         else:
             s = stream_trial(stream_client)
             b = batch_trial(batch_eng)
+        per_rep.append({
+            "ttft_speedup": (sum(b[1]) / len(b[1]))
+            / (sum(s[1]) / len(s[1])),
+            "tokens_per_s_ratio": b[0] / s[0],
+        })
         if batch_best is None or b[0] < batch_best:
             batch_best, batch_first = b
         if stream_best is None or s[0] < stream_best:
             stream_best, stream_ttfts, stream_gaps = s
+    var = _variance(per_rep)
     batch_eng.shutdown()
     stream_client.close()
 
@@ -1118,15 +1214,11 @@ def bench_serve_stream() -> None:
     emit("serve.stream.tokens_per_s_ratio", 0.0,
          f"{tps_ratio:.3f}x_vs_retirement")
 
-    try:
-        with open("BENCH_serve.json") as f:
-            doc = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        doc = {}
-    doc["stream"] = {
+    _append_block("stream", {
         "workload": {"n_requests": n_requests, "n_slots": n_slots,
                      "prompt_len": prompt_len, "length": length,
                      "repeats_best_of": repeats},
+        "samples": repeats,
         "streaming": {"tokens_per_s": stream_tps,
                       "makespan_s": stream_best,
                       "ttft_mean_s": ttft_stream,
@@ -1136,10 +1228,8 @@ def bench_serve_stream() -> None:
                        "first_observable_mean_s": ttft_batch},
         "ttft_speedup": ttft_speedup,
         "tokens_per_s_ratio": tps_ratio,
-    }
-    with open("BENCH_serve.json", "w") as f:
-        json.dump(doc, f, indent=2)
-    print("# appended stream block to BENCH_serve.json", flush=True)
+        "variance": var,
+    })
 
 
 # ==================== beyond paper: disaggregated prefill/decode roles
@@ -1220,22 +1310,32 @@ def bench_serve_disagg() -> None:
     # warm both compile caches, then best-of-N with interleaved order
     colocated_trial()
     disagg_trial()
-    repeats = 2 if QUICK else 3
+    repeats = max(2 if QUICK else 3, SAMPLES)
     colo_best = dis_best = None
     colo_ttft = dis_ttft = 0.0
     dis_metrics = {}
+    per_rep = []
     for rep in range(repeats):
         trials = (colocated_trial, disagg_trial) if rep % 2 == 0 \
             else (disagg_trial, colocated_trial)
+        rep_colo = rep_dis = None
         for t in trials:
             if t is colocated_trial:
                 dt, ttft = t()
+                rep_colo = dt
                 if colo_best is None or dt < colo_best:
                     colo_best, colo_ttft = dt, ttft
             else:
                 dt, ttft, m = t()
+                rep_dis = dt
                 if dis_best is None or dt < dis_best:
                     dis_best, dis_ttft, dis_metrics = dt, ttft, m
+        per_rep.append({
+            "colocated_tokens_per_s": useful_tokens / rep_colo,
+            "disagg_tokens_per_s": useful_tokens / rep_dis,
+            "tokens_per_s_ratio": rep_colo / rep_dis,
+        })
+    var = _variance(per_rep)
 
     colo_tps = useful_tokens / colo_best
     dis_tps = useful_tokens / dis_best
@@ -1252,15 +1352,11 @@ def bench_serve_disagg() -> None:
     emit("serve.disagg.bytes_shipped_per_request", 0.0,
          f"{bytes_per_req:.0f}B_{dis_metrics['blocks_shipped']}_blocks")
 
-    try:
-        with open("BENCH_serve.json") as f:
-            doc = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        doc = {}
-    doc["disagg"] = {
+    _append_block("disagg", {
         "workload": {"n_requests": n_requests, "prompt_len": prompt_len,
                      "length": length, "page_size": page_size,
                      "chunk_pages": 1, "repeats_best_of": repeats},
+        "samples": repeats,
         "disaggregated": {"tokens_per_s": dis_tps, "makespan_s": dis_best,
                           "ttft_mean_s": dis_ttft},
         "colocated": {"tokens_per_s": colo_tps, "makespan_s": colo_best,
@@ -1268,10 +1364,8 @@ def bench_serve_disagg() -> None:
         "tokens_per_s_ratio": tps_ratio,
         "bytes_shipped_per_request": bytes_per_req,
         "blocks_shipped": dis_metrics["blocks_shipped"],
-    }
-    with open("BENCH_serve.json", "w") as f:
-        json.dump(doc, f, indent=2)
-    print("# appended disagg block to BENCH_serve.json", flush=True)
+        "variance": var,
+    })
 
 
 # ==================== beyond paper: multi-replica front door (router)
@@ -1399,12 +1493,7 @@ def bench_serve_router() -> None:
          f"zero_loss_{zero_loss}_identical_{identical}_requeued_"
          f"{m2['requeued']}")
 
-    try:
-        with open("BENCH_serve.json") as f:
-            doc = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        doc = {}
-    doc["router"] = {
+    _append_block("router", {
         "workload": {"n_requests": n_requests, "prefix_groups": n_groups,
                      "shared_len": shared_len, "length": length,
                      "page_size": page_size, "n_replicas": 2},
@@ -1417,10 +1506,104 @@ def bench_serve_router() -> None:
         "failover": {"zero_loss": zero_loss, "token_identical": identical,
                      "failovers": m2["failovers"],
                      "requeued": m2["requeued"]},
-    }
-    with open("BENCH_serve.json", "w") as f:
-        json.dump(doc, f, indent=2)
-    print("# appended router block to BENCH_serve.json", flush=True)
+    })
+
+
+# ================== beyond paper: trace-replay harness over every tier
+def bench_serve_trace() -> None:
+    """One seeded mixed workload — bursty on/off arrivals, heavy-tailed
+    output lengths, shared-prefix groups, two tenants, two priorities,
+    per-request deadlines — replayed through ALL three serving tiers
+    (colocated ``ServeEngine``, disaggregated ``DisaggServer``,
+    multi-replica ``Router``) by the ``repro.bench`` harness, ``SAMPLES``
+    samples each, reported as SLO verdicts (goodput under deadline,
+    p50/p99/p99.9 TTFT and inter-token latency, mean/cv/ci95 per metric).
+
+    Then a saturation sweep on the colocated engine: binary-search the
+    max offered QPS at which the SLO still holds, rescaling the SAME
+    trace (same prompts, same ordering — only the arrival clock moves).
+    Appends a ``trace`` block to BENCH_serve.json.
+    """
+    import jax
+    from repro.bench import (Replayer, SLO, slo_report, sweep_tier,
+                             synthetic_trace)
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve import Router, ServeEngine
+    from repro.serve.disagg import DisaggServer
+
+    cfg = get_config("paper_demo", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    n_requests = 8 if QUICK else 16
+    prompt_len, max_seq = 12, 64
+    kw = dict(max_batch=4, max_cache_len=max_seq, page_size=8,
+              max_seq_len=32)
+    trace = synthetic_trace(
+        n_requests, seed=1009, vocab_size=cfg.vocab_size,
+        arrival="onoff", rate_qps=40.0, mean_burst=4.0, mean_off_s=0.15,
+        prompt_len=(prompt_len, prompt_len), output_len=(4, 16),
+        output_alpha=1.2, n_prefix_groups=2, shared_len=8,
+        tenants={"alpha": 2.0, "beta": 1.0}, priorities={0: 3.0, 1: 1.0},
+        deadline_s=30.0, name="serve_mix")
+    # correctness-shaped SLO: everything must finish inside its deadline
+    # and first tokens must land in single-digit seconds even on a
+    # throttled CI runner — a hung tier or admission bug fails it
+    slo = SLO(ttft_p99_s=10.0, min_finished_frac=1.0,
+              min_deadline_met_frac=1.0)
+
+    tiers = (
+        ("engine", lambda: ServeEngine(cfg, params, paged=True, **kw)),
+        ("disagg", lambda: DisaggServer(cfg, params, chunk_pages=1, **kw)),
+        ("router", lambda: Router(cfg, params, n_replicas=2,
+                                  saturation=2 * n_requests, paged=True,
+                                  **kw)),
+    )
+    # the sweep needs enough offered work that overload visibly queues:
+    # same shapes as the main trace (no fresh compiles on the warm
+    # replayer) but more, longer requests and a TTFT bound that holds at
+    # trickle rates and breaks once arrivals outrun decode capacity
+    sweep_trace = synthetic_trace(
+        32 if QUICK else 48, seed=1013, vocab_size=cfg.vocab_size,
+        arrival="poisson", rate_qps=20.0, prompt_len=(prompt_len,
+                                                      prompt_len),
+        output_len=(12, 16), output_alpha=1.2, n_prefix_groups=2,
+        shared_len=8, name="serve_sweep")
+    sweep_slo = SLO(ttft_p99_s=0.15, min_finished_frac=1.0)
+    reports = {}
+    sweep_doc = None
+    for name, factory in tiers:
+        with Replayer(factory, name=name) as rp:
+            results = rp.run(trace, samples=SAMPLES, timeout=600)
+            rep = slo_report(results, slo)
+            reports[name] = rep
+            m = rep["metrics"]
+            tok = max(1.0, m["tokens_per_s"]["mean"])
+            emit(f"serve.trace.{name}", 1e6 / tok,
+                 f"{m['tokens_per_s']['mean']:.0f}_tok_per_s_goodput_"
+                 f"{m['goodput_tokens_per_s']['mean']:.0f}_ttft_p99_"
+                 f"{m['ttft_p99_s']['mean'] * 1e3:.0f}ms_slo_"
+                 f"{'ok' if rep['slo']['ok'] else 'VIOLATED'}")
+            if name == "engine":
+                # saturation sweep on the warm colocated engine
+                sweep = sweep_tier(rp, sweep_trace, sweep_slo,
+                                   lo_qps=8.0, hi_qps=150.0,
+                                   iters=2 if QUICK else 3)
+                sweep_doc = dict(sweep.to_dict(),
+                                 slo=sweep_slo.to_dict(),
+                                 trace=sweep_trace.meta)
+                mq = sweep.max_qps
+                emit("serve.trace.sweep_max_qps", 0.0,
+                     f"{'none' if mq is None else f'{mq:.1f}'}_qps_"
+                     f"{len(sweep.points)}_probes"
+                     f"{'_range_saturated' if sweep.saturated_range else ''}")
+
+    _append_block("trace", {
+        "workload": dict(trace.meta, n_requests=n_requests),
+        "samples": SAMPLES,
+        "slo": slo.to_dict(),
+        "tiers": reports,
+        "sweep": sweep_doc,
+    })
 
 
 # ========================= beyond paper: API layer (flags + await bridge)
@@ -1522,9 +1705,12 @@ def bench_api() -> None:
             raws.append(raw_batch())
             directs.append(await await_batch())
             gathers.append(await gather_batch())
-        return min(raws), min(directs), min(gathers)
+        return raws, directs, gathers
 
-    raw_us, await_us, gather_us = asyncio.run(interleaved())
+    raws, directs, gathers = asyncio.run(interleaved())
+    raw_us, await_us, gather_us = min(raws), min(directs), min(gathers)
+    var = _variance([{"raw_vs_await_ratio": r / d}
+                     for r, d in zip(raws, directs)])
     eng.shutdown()
 
     emit("core.api.notify.raw_callback", raw_us, "us_per_completion")
@@ -1535,26 +1721,20 @@ def bench_api() -> None:
     emit("core.api.notify.gather_bridge", gather_us,
          f"{gather_us / raw_us:.3f}x_vs_raw_incl_task_wrap")
 
-    try:
-        with open("BENCH_serve.json") as f:
-            doc = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        doc = {}
-    doc["api"] = {
+    _append_block("api", {
         "flags_register_plain_us": us_plain,
         "flags_register_flagged_us": us_flagged,
         "flags_overhead_ratio": flags_ratio,
         "notify_batch": K,
+        "samples": rounds,
         "raw_callback_us": raw_us,
         "await_bridge_us": await_us,
         "gather_bridge_us": gather_us,
         "await_vs_raw_ratio": await_us / raw_us,
         # gated form: higher is better, floor 0.8 == "<= 25% overhead"
         "raw_vs_await_ratio": raw_us / await_us,
-    }
-    with open("BENCH_serve.json", "w") as f:
-        json.dump(doc, f, indent=2)
-    print("# appended api block to BENCH_serve.json", flush=True)
+        "variance": var,
+    })
 
 
 # bench_api must run after bench_serve: bench_serve (re)creates
@@ -1563,22 +1743,81 @@ ALL_BENCHES = (bench_notification, bench_scheduler, bench_zones,
                bench_dataflow, bench_offload, bench_loc,
                bench_train_overlap, bench_serve, bench_serve_paged,
                bench_serve_kernel, bench_serve_spec, bench_serve_stream,
-               bench_serve_disagg, bench_serve_router, bench_api)
+               bench_serve_disagg, bench_serve_router,
+               bench_serve_trace, bench_api)
 QUICK_BENCHES = (bench_notification, bench_scheduler, bench_loc,
                  bench_serve, bench_serve_paged, bench_serve_kernel,
                  bench_serve_spec, bench_serve_stream,
-                 bench_serve_disagg, bench_serve_router, bench_api)
+                 bench_serve_disagg, bench_serve_router,
+                 bench_serve_trace, bench_api)
+
+
+def _append_history(args: argparse.Namespace) -> None:
+    """One compact record per invocation into benchmarks/history.jsonl —
+    git SHA, timestamp, gated/recorded metric values, sample count — so
+    metric drift is greppable across commits without digging through CI
+    artifacts. Best-effort: a partial run records what it measured."""
+    import datetime
+    import os
+    import subprocess
+
+    try:
+        with open("BENCH_serve.json") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return                       # no serve blocks ran (e.g. --only zones)
+    bench_dir = os.path.dirname(os.path.abspath(__file__))
+    try:
+        import check_regression      # benchmarks/ is sys.path[0]
+    except ImportError:
+        import importlib.util
+        spec = importlib.util.spec_from_file_location(
+            "check_regression",
+            os.path.join(bench_dir, "check_regression.py"))
+        check_regression = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(check_regression)
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=bench_dir,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    recorded = {}
+    for name, fn in check_regression.RECORDED.items():
+        try:
+            recorded[name] = round(float(fn(doc)), 4)
+        except (KeyError, TypeError, ZeroDivisionError):
+            pass
+    record = {
+        "ts": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "git_sha": sha,
+        "quick": bool(args.quick),
+        "only": args.only,
+        "samples": SAMPLES,
+        "metrics": {k: round(v, 4)
+                    for k, v in check_regression.extract(doc).items()},
+        "recorded": recorded,
+    }
+    path = os.path.join(bench_dir, "history.jsonl")
+    with open(path, "a") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    print(f"# appended run record to {path}", flush=True)
 
 
 def main() -> None:
-    global QUICK
+    global QUICK, SAMPLES
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke subset at reduced sizes")
     ap.add_argument("--only", default=None, metavar="BLOCK",
                     help="run a single block (e.g. 'serve', 'dataflow')")
+    ap.add_argument("--samples", type=int, default=3, metavar="N",
+                    help="measured samples per serve scenario; feeds the "
+                    "mean/cv/ci95 variance fields in BENCH_serve.json")
     args = ap.parse_args()
     QUICK = args.quick
+    SAMPLES = max(1, args.samples)
     benches = QUICK_BENCHES if args.quick else ALL_BENCHES
     if args.only:
         benches = [b for b in ALL_BENCHES
@@ -1589,6 +1828,7 @@ def main() -> None:
     for bench in benches:
         print(f"# --- {bench.__name__} ---", flush=True)
         bench()
+    _append_history(args)
 
 
 if __name__ == "__main__":

@@ -125,6 +125,11 @@ class Request(Completable):
         self._deliver_lock = threading.RLock()
         self._out: List[int] = []
         self._hold: List[int] = []
+        # per-token delivery instants (monotonic), 1:1 with committed
+        # tokens: stamped where delivery publishes to the stream, so the
+        # bench runner reads inter-token latencies without per-consumer
+        # timing threads. Tokens committed by one step share a stamp.
+        self.token_times: List[float] = []
         self._delivered_any = False
         self._stop_hit = False
         self._stream: Optional[Any] = None    # serve.api.TokenStream
@@ -262,8 +267,11 @@ class Request(Completable):
                     if hit:
                         self._stop_hit = True
                         break
-            if committed and self._stream is not None:
-                self._stream._publish(committed)
+            if committed:
+                self.token_times.extend(
+                    [time.monotonic()] * len(committed))
+                if self._stream is not None:
+                    self._stream._publish(committed)
             return "stop" if self._stop_hit else None
 
     def _hold_token(self, t: int, committed: List[int]) -> bool:
@@ -315,6 +323,7 @@ class Request(Completable):
         if self._hold:
             front, self._hold = self._hold, []
             self._out.extend(front)
+            self.token_times.extend([time.monotonic()] * len(front))
             if self._stream is not None:
                 self._stream._publish(front)
 

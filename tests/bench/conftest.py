@@ -1,0 +1,14 @@
+"""Shared fixtures for the bench-subsystem tests: one reduced model per
+module so the (slow) param init and XLA warmup are paid once."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+
+
+@pytest.fixture(scope="package")
+def small_model():
+    cfg = get_config("paper_demo", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params

@@ -1,0 +1,241 @@
+"""The regression gate's decision machinery, driven through fabricated
+BENCH_serve.json documents: extraction, conditional exemption,
+variance-aware unstable demotion (committed cv decides, exempt wins),
+baseline migration via --update semantics, and the summary artifact.
+
+``benchmarks/`` is not a package — the gate is loaded from its file path
+exactly the way CI runs it (no PYTHONPATH=src, no repro import).
+"""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_PATH = (pathlib.Path(__file__).resolve().parents[2]
+         / "benchmarks" / "check_regression.py")
+_spec = importlib.util.spec_from_file_location("check_regression", _PATH)
+cr = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cr)
+
+
+def make_doc(fused=False):
+    """A complete bench document with healthy values and per-block
+    variance fields (cv 0.02 everywhere except the marked-noisy spec
+    speedup at 0.4)."""
+    v = lambda cv: {"mean": 1.0, "cv": cv, "ci95": 0.01, "values": [1.0]}
+    return {
+        "speedup_tokens_per_s": 2.0,
+        "continuous": {"tokens_per_s": 100.0, "ttft_p99_s": 0.01},
+        "static_greedy": {"ttft_p99_s": 0.04},
+        "variance": {"speedup_tokens_per_s": v(0.02),
+                     "ttft_p99_ratio": v(0.02)},
+        "paged": {"effective_batch_ratio": 2.0,
+                  "speedup_tokens_per_s": 1.0,
+                  "paged": {"tokens_per_s": 100.0},
+                  "variance": {"effective_batch_ratio": v(0.0),
+                               "speedup_tokens_per_s": v(0.02)}},
+        "spec": {"speedup_tokens_per_s": 1.1,
+                 "speculative": {"accept_rate": 0.3,
+                                 "tokens_per_s": 110.0},
+                 "variance": {"speedup_tokens_per_s": v(0.4)}},
+        "stream": {"ttft_speedup": 5.0, "tokens_per_s_ratio": 1.1,
+                   "streaming": {"tokens_per_s": 100.0,
+                                 "ttft_mean_s": 0.01,
+                                 "inter_token_p99_s": 0.005},
+                   "variance": {"ttft_speedup": v(0.02),
+                                "tokens_per_s_ratio": v(0.02)}},
+        "api": {"raw_vs_await_ratio": 0.9, "raw_callback_us": 7.0,
+                "await_bridge_us": 8.0, "flags_overhead_ratio": 1.05,
+                "variance": {"raw_vs_await_ratio": v(0.02)}},
+        "router": {"affinity_hit_rate": 0.83, "tokens_per_s_ratio": 0.9,
+                   "failover": {"requeued": 12}},
+        "disagg": {"tokens_per_s_ratio": 0.9,
+                   "bytes_shipped_per_request": 6144},
+        "kernel": {"fused_kernel_active": fused},
+    }
+
+
+def baselines_for(doc, **overrides):
+    """Baselines matching ``doc`` exactly (floor < current everywhere),
+    with per-metric entry overrides layered on."""
+    metrics = {}
+    for name, (fn, tol) in cr.GATED.items():
+        metrics[name] = {"value": float(fn(doc)), "tolerance": tol}
+    cvs = cr.extract_cv(doc)
+    for name, cv in cvs.items():
+        metrics[name]["cv"] = cv
+    for name, entry in overrides.items():
+        metrics[name] = {**metrics[name], **entry}
+    return {"metrics": metrics}
+
+
+# ------------------------------------------------------------- extraction
+def test_extract_covers_every_gated_metric():
+    got = cr.extract(make_doc())
+    assert set(got) == set(cr.GATED)
+    assert got["continuous_vs_static_ttft_p99"] == pytest.approx(4.0)
+    assert got["router_affinity_hit_rate"] == 0.83
+
+
+def test_extract_tolerates_partial_documents():
+    got = cr.extract({"paged": {"effective_batch_ratio": 2.0,
+                                "speedup_tokens_per_s": 1.0}})
+    assert got == {"paged_vs_dense_effective_batch": 2.0,
+                   "paged_vs_dense_tokens_per_s": 1.0}
+
+
+def test_extract_cv_reads_variance_fields():
+    cvs = cr.extract_cv(make_doc())
+    assert cvs["spec_vs_paged_tokens_per_s"] == pytest.approx(0.4)
+    assert cvs["paged_vs_dense_effective_batch"] == 0.0
+    # deterministic metrics are not in the CV map at all
+    assert "router_affinity_hit_rate" not in cvs
+    assert "spec_accept_rate" not in cvs
+    # single-sample documents (no variance blocks) degrade to empty
+    assert cr.extract_cv({"paged": {}}) == {}
+
+
+# ------------------------------------------------------------ gate: happy
+def test_gate_passes_on_matching_doc(capsys):
+    doc = make_doc()
+    assert cr.check(doc, baselines_for(doc)) == 0
+    assert "regression gate passed" in capsys.readouterr().out
+
+
+def test_gate_fails_on_regression(capsys):
+    doc = make_doc()
+    base = baselines_for(doc)
+    doc["paged"]["effective_batch_ratio"] = 0.5   # collapse one ratio
+    assert cr.check(doc, base) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSED" in out
+    assert "paged_vs_dense_effective_batch" in out
+
+
+def test_gate_fails_on_missing_baseline_entry():
+    doc = make_doc()
+    base = baselines_for(doc)
+    del base["metrics"]["spec_accept_rate"]
+    assert cr.check(doc, base) == 1
+
+
+def test_gate_fails_on_unextractable_metric():
+    doc = make_doc()
+    base = baselines_for(doc)
+    del doc["router"]                              # block missing
+    assert cr.check(doc, base) == 1
+
+
+# --------------------------------------------------------- gate: unstable
+def test_unstable_metric_is_recorded_only(capsys):
+    """A committed cv over the threshold demotes the metric: even a
+    value far below the floor must not fail the gate."""
+    doc = make_doc()
+    base = baselines_for(
+        doc, spec_vs_paged_tokens_per_s={"value": 1.1, "tolerance": 0.25,
+                                         "cv": cr.UNSTABLE_CV + 0.1})
+    doc["spec"]["speedup_tokens_per_s"] = 0.01     # way below floor
+    assert cr.check(doc, base) == 0
+    out = capsys.readouterr().out
+    assert "unstable" in out
+    assert "recorded-only" in out
+
+
+def test_current_cv_never_decides(capsys):
+    """Only the COMMITTED cv demotes — a noisy current run with a stable
+    committed baseline still gates (CI verdicts stay deterministic)."""
+    doc = make_doc()
+    base = baselines_for(doc,
+                         spec_vs_paged_tokens_per_s={"cv": 0.02})
+    doc["spec"]["variance"]["speedup_tokens_per_s"]["cv"] = 0.9
+    doc["spec"]["speedup_tokens_per_s"] = 0.01
+    assert cr.check(doc, base) == 1               # still enforced
+    assert "REGRESSED" in capsys.readouterr().out
+
+
+def test_legacy_baseline_without_cv_keeps_gating():
+    doc = make_doc()
+    base = baselines_for(doc)
+    base["metrics"]["stream_vs_batch_ttft"].pop("cv", None)
+    doc["stream"]["ttft_speedup"] = 0.01
+    assert cr.check(doc, base) == 1
+
+
+# ----------------------------------------------------------- gate: exempt
+def test_conditional_exemption_and_precedence(capsys):
+    """fused_kernel_active=False exempts the paged tokens/s floor; exempt
+    wins over unstable (one status per row, exemption is the stronger
+    statement)."""
+    doc = make_doc(fused=False)
+    base = baselines_for(
+        doc, paged_vs_dense_tokens_per_s={"value": 1.0,
+                                          "tolerance": 0.05, "cv": 0.9})
+    doc["paged"]["speedup_tokens_per_s"] = 0.01
+    assert cr.check(doc, base) == 0
+    out = capsys.readouterr().out
+    row = next(l for l in out.splitlines()
+               if l.startswith("paged_vs_dense_tokens_per_s"))
+    assert "exempt" in row and "unstable" not in row
+
+
+def test_conditional_enforced_when_predicate_holds():
+    doc = make_doc(fused=True)
+    base = baselines_for(doc)
+    doc["paged"]["speedup_tokens_per_s"] = 0.01
+    assert cr.check(doc, base) == 1
+
+
+# --------------------------------------------------------------- --update
+def test_update_writes_value_tolerance_cv(tmp_path):
+    path = tmp_path / "baselines.json"
+    cr.update_baselines(make_doc(), path)
+    saved = json.loads(path.read_text())
+    entry = saved["metrics"]["continuous_vs_static_tokens_per_s"]
+    assert entry["value"] == 2.0
+    assert entry["tolerance"] == cr.GATED[
+        "continuous_vs_static_tokens_per_s"][1]
+    assert entry["cv"] == pytest.approx(0.02)
+    # deterministic metric: no cv key rather than a fake zero
+    assert "cv" not in saved["metrics"]["router_affinity_hit_rate"]
+    assert set(saved["recorded"]) == set(cr.RECORDED)
+
+
+def test_update_preserves_hand_tuned_tolerance(tmp_path):
+    path = tmp_path / "baselines.json"
+    path.write_text(json.dumps({"metrics": {
+        "spec_accept_rate": {"value": 0.9, "tolerance": 0.07}}}))
+    cr.update_baselines(make_doc(), path)
+    saved = json.loads(path.read_text())
+    assert saved["metrics"]["spec_accept_rate"]["tolerance"] == 0.07
+    assert saved["metrics"]["spec_accept_rate"]["value"] == 0.3  # refreshed
+
+
+def test_update_exempt_keeps_committed_value_and_cv(tmp_path):
+    path = tmp_path / "baselines.json"
+    path.write_text(json.dumps({"metrics": {
+        "paged_vs_dense_tokens_per_s": {"value": 1.23, "tolerance": 0.05,
+                                        "cv": 0.04}}}))
+    cr.update_baselines(make_doc(fused=False), path)
+    entry = json.loads(path.read_text())[
+        "metrics"]["paged_vs_dense_tokens_per_s"]
+    assert entry == {"value": 1.23, "tolerance": 0.05, "cv": 0.04}
+
+
+def test_update_refuses_partial_document(tmp_path):
+    with pytest.raises(SystemExit, match="not extractable"):
+        cr.update_baselines({"paged": {}}, tmp_path / "b.json")
+
+
+# ---------------------------------------------------------------- summary
+def test_summary_markdown_has_cv_column_and_badges(tmp_path):
+    doc = make_doc()
+    base = baselines_for(
+        doc, stream_vs_batch_ttft={"cv": 0.6})
+    out = tmp_path / "summary.md"
+    assert cr.check(doc, base, str(out)) == 0
+    md = out.read_text()
+    assert "| cv |" in md
+    assert "🌀 unstable" in md
+    assert "➖ exempt" in md                       # fused=False default
+    assert "recorded-only" in md

@@ -1,0 +1,133 @@
+"""Replayer semantics against a real (reduced) engine: complete replay
+with per-request timing, shared-prefix traces actually hitting the
+prefix cache THROUGH the measurement path, deadline accounting, closed
+loops, and the metric aggregates fed to the SLO layer."""
+import jax
+import pytest
+
+from repro.bench import Replayer, micro_trace, replay
+from repro.bench.runner import RequestRecord, RunResult
+from repro.serve import ServeEngine
+
+KW = dict(max_batch=2, max_cache_len=64, page_size=4, max_seq_len=48)
+
+
+@pytest.fixture(scope="module")
+def warm_replayer(small_model):
+    cfg, params = small_model
+    with Replayer(ServeEngine(cfg, params, paged=True, **KW),
+                  name="engine") as rp:
+        yield rp
+
+
+# ------------------------------------------------------------ basic replay
+def test_open_loop_replay_records_everything(warm_replayer):
+    trace = micro_trace(seed=21, n_requests=5, max_tokens=3)
+    (res,) = warm_replayer.run(trace, samples=1, timeout=120.0)
+    assert res.tier == "engine" and res.trace_name == "micro"
+    assert len(res.records) == 5
+    for rec in res.records:
+        assert rec.status == "finished"
+        assert rec.n_tokens == 3
+        assert rec.ttft_s is not None and rec.ttft_s > 0
+        assert rec.latency_s >= rec.ttft_s
+        assert len(rec.itl_s) == 2              # gaps between 3 stamps
+        assert all(g >= 0 for g in rec.itl_s)
+    m = res.metrics()
+    assert m["finished_frac"] == 1.0
+    assert m["tokens_per_s"] > 0
+    assert m["goodput_tokens_per_s"] == m["tokens_per_s"]  # no deadlines
+    assert m["ttft_p99_s"] >= m["ttft_p50_s"] >= 0
+    assert "deadline_met_frac" not in m
+    assert res.engine_metrics                   # tier metrics snapshot
+
+
+def test_multi_sample_reuses_warm_tier(warm_replayer):
+    trace = micro_trace(seed=22, n_requests=4, max_tokens=2)
+    results = warm_replayer.run(trace, samples=3, timeout=120.0)
+    assert [r.sample for r in results] == [0, 1, 2]
+    assert all(r.metrics()["finished_frac"] == 1.0 for r in results)
+
+
+# ----------------------------------------------------- prefix-cache reality
+def test_shared_prefix_trace_hits_prefix_cache(warm_replayer):
+    """The runner measures the real serving path: a shared-prefix trace
+    must land prefix-cache hits in the engine's page pool."""
+    trace = micro_trace(seed=23, n_requests=8, prompt_len=12,
+                        max_tokens=2, n_prefix_groups=2, shared_len=8)
+    pool = warm_replayer.client.serve.pool
+    before = pool.stats["prefix_hits"]
+    (res,) = warm_replayer.run(trace, samples=1, timeout=120.0)
+    assert all(r.status == "finished" for r in res.records)
+    assert pool.stats["prefix_hits"] > before
+    assert pool.stats["prefix_tokens_reused"] > 0
+
+
+# ------------------------------------------------------ deadline accounting
+def test_generous_deadlines_all_met(warm_replayer):
+    trace = micro_trace(seed=24, n_requests=4, max_tokens=2,
+                        deadline_s=60.0)
+    (res,) = warm_replayer.run(trace, samples=1, timeout=120.0)
+    assert all(r.deadline_met is True for r in res.records)
+    assert res.metrics()["deadline_met_frac"] == 1.0
+
+
+def test_missed_deadline_is_excluded_from_goodput():
+    """Pure-record unit: a finished-but-late request counts toward
+    throughput, never toward goodput."""
+    ok = RequestRecord(index=0, tenant="t", priority=0, status="finished",
+                       arrival_s=0.0, ttft_s=0.01, latency_s=0.1,
+                       n_tokens=10, itl_s=[0.01] * 9, deadline_s=1.0,
+                       deadline_met=True)
+    late = RequestRecord(index=1, tenant="t", priority=0,
+                         status="finished", arrival_s=0.0, ttft_s=0.5,
+                         latency_s=2.0, n_tokens=10, itl_s=[0.1] * 9,
+                         deadline_s=1.0, deadline_met=False)
+    assert ok.good and not late.good
+    res = RunResult(trace_name="x", tier="t", sample=0, duration_s=2.0,
+                    records=[ok, late])
+    m = res.metrics()
+    assert m["tokens_per_s"] == pytest.approx(10.0)      # 20 tok / 2 s
+    assert m["goodput_tokens_per_s"] == pytest.approx(5.0)
+    assert m["deadline_met_frac"] == 0.5
+    assert m["finished_frac"] == 1.0
+
+
+def test_refused_and_expired_counting():
+    refused = RequestRecord(index=0, tenant="t", priority=0,
+                            status="refused", arrival_s=0.0)
+    expired = RequestRecord(index=1, tenant="t", priority=0,
+                            status="expired", arrival_s=0.0, n_tokens=2,
+                            itl_s=[0.1])
+    res = RunResult(trace_name="x", tier="t", sample=0, duration_s=1.0,
+                    records=[refused, expired])
+    m = res.metrics()
+    assert m["refused"] == 1.0 and m["expired"] == 1.0
+    assert m["finished_frac"] == 0.0
+    assert m["goodput_tokens_per_s"] == 0.0
+    assert not refused.good and not expired.good
+
+
+# ------------------------------------------------------------- closed loop
+def test_closed_loop_replay(warm_replayer):
+    trace = micro_trace(seed=25, n_requests=6, max_tokens=2,
+                        closed_loop=2)
+    (res,) = warm_replayer.run(trace, samples=1, timeout=120.0)
+    assert res.closed_loop == 2
+    assert all(r.status == "finished" for r in res.records)
+    assert res.metrics()["finished_frac"] == 1.0
+
+
+# --------------------------------------------------------------- lifecycle
+def test_replay_one_shot_owns_the_tier(small_model):
+    cfg, params = small_model
+    trace = micro_trace(seed=26, n_requests=3, max_tokens=2)
+    results = replay(lambda: ServeEngine(cfg, params, paged=True, **KW),
+                     trace, samples=1, timeout=120.0, name="oneshot")
+    assert results[0].tier == "oneshot"
+    assert results[0].metrics()["finished_frac"] == 1.0
+
+
+def test_samples_validation(warm_replayer):
+    with pytest.raises(ValueError):
+        warm_replayer.run(micro_trace(seed=0), samples=0)

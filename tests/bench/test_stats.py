@@ -1,0 +1,92 @@
+"""The variance layer: percentile interpolation, dispersion summaries,
+per-metric aggregation across samples, and the instability predicate the
+variance-aware regression gate stands on."""
+import math
+
+import pytest
+
+from repro.bench import (UNSTABLE_CV, Summary, is_unstable, percentile,
+                         summarize, summarize_metrics, variance_fields)
+
+
+# ------------------------------------------------------------ percentile
+def test_percentile_interpolation():
+    vals = [10.0, 20.0, 30.0, 40.0]
+    assert percentile(vals, 0.0) == 10.0
+    assert percentile(vals, 1.0) == 40.0
+    assert percentile(vals, 0.5) == 25.0
+    assert percentile([7.0], 0.99) == 7.0
+    assert percentile([], 0.5) == 0.0
+
+
+def test_percentile_order_independent():
+    assert percentile([3.0, 1.0, 2.0], 0.5) == 2.0
+
+
+# ------------------------------------------------------------- summarize
+def test_summarize_known_values():
+    s = summarize([1.0, 2.0, 3.0])
+    assert s.n == 3
+    assert s.mean == pytest.approx(2.0)
+    assert s.std == pytest.approx(1.0)          # sample std, ddof=1
+    assert s.cv == pytest.approx(0.5)
+    assert s.ci95 == pytest.approx(1.96 / math.sqrt(3))
+    assert (s.lo, s.hi) == (1.0, 3.0)
+    assert s.values == (1.0, 2.0, 3.0)
+
+
+def test_summarize_single_sample():
+    s = summarize([5.0])
+    assert (s.std, s.cv, s.ci95) == (0.0, 0.0, 0.0)
+    assert s.mean == 5.0
+    assert not s.unstable
+
+
+def test_summarize_zero_mean_and_empty():
+    assert summarize([-1.0, 1.0]).cv == 0.0     # no div-by-zero
+    with pytest.raises(ValueError):
+        summarize([])
+
+
+def test_unstable_property_tracks_threshold():
+    stable = summarize([1.0, 1.01, 0.99])
+    noisy = summarize([1.0, 2.0, 0.5])
+    assert stable.cv < UNSTABLE_CV < noisy.cv
+    assert not stable.unstable
+    assert noisy.unstable
+
+
+# ------------------------------------------------------- metric aggregation
+def test_summarize_metrics_per_key():
+    out = summarize_metrics([{"a": 1.0, "b": 10.0},
+                             {"a": 3.0, "b": 10.0}])
+    assert out["a"].mean == 2.0
+    assert out["b"].std == 0.0
+
+
+def test_summarize_metrics_skips_non_numeric_and_missing():
+    out = summarize_metrics([{"a": 1.0, "flag": True, "name": "x"},
+                             {"a": 2.0, "extra": 5.0}])
+    assert set(out) == {"a", "extra"}           # bool/str skipped
+    assert out["a"].n == 2
+    assert out["extra"].n == 1                  # summarized where present
+
+
+def test_variance_fields_shape():
+    vf = variance_fields([{"m": 1.0}, {"m": 2.0}])
+    assert set(vf["m"]) == {"mean", "cv", "ci95", "values"}
+    assert vf["m"]["mean"] == 1.5
+    assert vf["m"]["values"] == [1.0, 2.0]
+
+
+# ------------------------------------------------------------- is_unstable
+def test_is_unstable_predicate():
+    assert not is_unstable(None)                # legacy: no cv keeps gating
+    assert not is_unstable(UNSTABLE_CV)         # boundary is stable
+    assert is_unstable(UNSTABLE_CV + 1e-6)
+    assert is_unstable(0.05, threshold=0.01)    # custom threshold
+
+
+def test_summary_to_dict_is_json_safe():
+    import json
+    json.dumps(summarize([1.0, 2.0]).to_dict())

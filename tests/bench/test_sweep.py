@@ -1,0 +1,141 @@
+"""Saturation-sweep contract over stubbed evaluate functions (no engine,
+no clock): the three edge cases, bisection convergence, probe retries in
+``sweep_tier``, and artifact shape."""
+import dataclasses
+
+import pytest
+
+from repro.bench import (SLO, SweepResult, micro_trace, saturation_sweep,
+                         sweep_tier)
+from repro.bench.runner import RequestRecord, RunResult
+
+
+def boundary_at(limit):
+    """Evaluate stub: SLO holds iff qps <= limit."""
+    return lambda qps: (qps <= limit, {"probed": qps})
+
+
+# ---------------------------------------------------------- edge contract
+def test_fail_at_lo_means_none():
+    res = saturation_sweep(boundary_at(5.0), lo_qps=10.0, hi_qps=100.0)
+    assert res.max_qps is None
+    assert len(res.points) == 1                  # stopped after lo probe
+    assert res.points[0].qps == 10.0 and not res.points[0].ok
+    assert not res.saturated_range
+
+
+def test_pass_at_hi_means_saturated_range():
+    res = saturation_sweep(boundary_at(1e9), lo_qps=10.0, hi_qps=100.0)
+    assert res.max_qps == 100.0
+    assert res.saturated_range
+    assert [p.qps for p in res.points] == [10.0, 100.0]
+
+
+def test_bisection_converges_to_boundary():
+    res = saturation_sweep(boundary_at(37.0), lo_qps=10.0, hi_qps=100.0,
+                           iters=8)
+    assert res.max_qps is not None
+    assert res.max_qps <= 37.0                   # never overstates
+    assert res.max_qps == pytest.approx(37.0, abs=(100 - 10) / 2 ** 8)
+    assert not res.saturated_range
+    # every probe answer is recorded, in probe order
+    assert res.points[0].qps == 10.0 and res.points[1].qps == 100.0
+    assert len(res.points) == 2 + 8
+
+
+def test_zero_iters_returns_lo():
+    res = saturation_sweep(boundary_at(50.0), lo_qps=10.0, hi_qps=100.0,
+                           iters=0)
+    assert res.max_qps == 10.0                   # lo is the only known-good
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        saturation_sweep(boundary_at(1.0), lo_qps=10.0, hi_qps=10.0)
+    with pytest.raises(ValueError):
+        saturation_sweep(boundary_at(1.0), lo_qps=0.0, hi_qps=10.0)
+    with pytest.raises(ValueError):
+        saturation_sweep(boundary_at(1.0), lo_qps=1.0, hi_qps=10.0,
+                         iters=-1)
+
+
+def test_to_dict_keeps_violations():
+    res = SweepResult(
+        max_qps=None, lo_qps=1.0, hi_qps=2.0,
+        points=(dataclasses.replace(  # build via SweepPoint for clarity
+            saturation_sweep(boundary_at(0.0), lo_qps=1.0,
+                             hi_qps=2.0).points[0],
+            info={"slo": {"violations": [
+                {"metric": "ttft_p99_s", "bound": 0.1, "worst": 0.4,
+                 "kind": "ceiling"}]}}),))
+    d = res.to_dict()
+    assert d["points"][0]["violations"] == [
+        {"metric": "ttft_p99_s", "bound": 0.1, "worst": 0.4}]
+    import json
+    json.dumps(d)                                # artifact is JSON-safe
+
+
+# ------------------------------------------------------------- sweep_tier
+class _StubReplayer:
+    """Duck-typed Replayer: fabricates one RunResult per run() whose TTFT
+    scales with the probe rate, optionally failing the first attempt at
+    each rate (the ambient-straggler case retries exist for)."""
+
+    def __init__(self, ttft_per_qps=0.001, flaky_rates=()):
+        self.ttft_per_qps = ttft_per_qps
+        self.flaky = set(flaky_rates)
+        self.runs = []                           # (qps, ttft) per run()
+
+    def run(self, trace, *, samples=1, timeout=300.0, warmup=2):
+        qps = round(trace.offered_qps, 4)
+        ttft = qps * self.ttft_per_qps
+        if qps in self.flaky:                    # one-shot straggler
+            self.flaky.discard(qps)
+            ttft = 10.0
+        self.runs.append((qps, ttft))
+        rec = RequestRecord(index=0, tenant="default", priority=0,
+                            status="finished", arrival_s=0.0,
+                            ttft_s=ttft, latency_s=ttft + 0.01,
+                            n_tokens=4, itl_s=[0.001] * 3)
+        return [RunResult(trace_name=trace.name, tier="stub", sample=i,
+                          duration_s=1.0, records=[rec])
+                for i in range(samples)]
+
+
+def _trace():
+    return micro_trace(seed=0, n_requests=8, rate_qps=50.0)
+
+
+def test_sweep_tier_finds_boundary_through_rescale():
+    stub = _StubReplayer(ttft_per_qps=0.001)     # fails above 100 qps
+    res = sweep_tier(stub, _trace(), SLO(ttft_p99_s=0.1),
+                     lo_qps=10.0, hi_qps=400.0, iters=6, retries=0)
+    assert res.max_qps is not None
+    assert res.max_qps <= 100.0
+    assert res.max_qps == pytest.approx(100.0, abs=(400 - 10) / 2 ** 6)
+    # every probe replayed the rescaled trace at its own rate
+    assert {q for q, _ in stub.runs} == {round(p.qps, 4)
+                                         for p in res.points}
+
+
+def test_sweep_tier_retries_confirm_failures():
+    # the lo probe hits a one-shot straggler; without retries the sweep
+    # would report None, with one retry it recovers the real boundary
+    flaky = _StubReplayer(ttft_per_qps=0.001, flaky_rates=(10.0,))
+    res = sweep_tier(flaky, _trace(), SLO(ttft_p99_s=0.1),
+                     lo_qps=10.0, hi_qps=400.0, iters=2, retries=1)
+    assert res.max_qps is not None               # straggler absorbed
+    assert res.points[0].ok
+
+    flaky2 = _StubReplayer(ttft_per_qps=0.001, flaky_rates=(10.0,))
+    res2 = sweep_tier(flaky2, _trace(), SLO(ttft_p99_s=0.1),
+                      lo_qps=10.0, hi_qps=400.0, iters=2, retries=0)
+    assert res2.max_qps is None                  # sticky false-fail
+
+
+def test_sweep_tier_genuine_failure_stays_failed():
+    stub = _StubReplayer(ttft_per_qps=1.0)       # hopeless at any rate
+    res = sweep_tier(stub, _trace(), SLO(ttft_p99_s=0.1),
+                     lo_qps=10.0, hi_qps=400.0, iters=2, retries=2)
+    assert res.max_qps is None
+    assert len([q for q, _ in stub.runs if q == 10.0]) == 3  # 1 + 2 retries

@@ -1,0 +1,65 @@
+"""One seeded micro-trace through ALL THREE serving tiers — colocated
+``ServeEngine``, disaggregated ``DisaggServer``, multi-replica ``Router``
+— via the same ``Replayer``, producing comparable SLO reports. This is
+the apples-to-apples contract the bench subsystem exists for."""
+import jax
+import pytest
+
+from repro.bench import SLO, micro_trace, replay, slo_report, to_markdown
+from repro.serve import DisaggServer, Router, ServeEngine
+
+KW = dict(max_batch=2, max_cache_len=64, page_size=4, max_seq_len=48)
+
+TRACE = micro_trace(seed=31, n_requests=4, prompt_len=12, max_tokens=3,
+                    n_prefix_groups=2, shared_len=8, rate_qps=100.0,
+                    deadline_s=60.0)
+
+# loose bounds: this asserts plumbing (every tier measured the same way),
+# not performance — perf floors live in benchmarks/, not unit tests
+LOOSE = SLO(ttft_p99_s=60.0, min_finished_frac=1.0,
+            min_deadline_met_frac=1.0)
+
+
+def _tiers(small_model):
+    cfg, params = small_model
+    return [
+        ("engine", lambda: ServeEngine(cfg, params, paged=True, **KW)),
+        ("disagg", lambda: DisaggServer(cfg, params, **KW)),
+        ("router", lambda: Router(cfg, params, n_replicas=2, **KW)),
+    ]
+
+
+@pytest.mark.parametrize("tier_name", ["engine", "disagg", "router"])
+def test_each_tier_replays_the_same_trace(small_model, tier_name):
+    factory = dict(_tiers(small_model))[tier_name]
+    results = replay(factory, TRACE, samples=1, timeout=180.0,
+                     name=tier_name)
+    report = slo_report(results, LOOSE)
+    assert report["tier"] == tier_name
+    assert report["trace"] == "micro"
+    assert report["requests"] == 4
+    assert report["slo"]["ok"], report["slo"]["violations"]
+    # the report carries dispersion fields for every headline metric
+    for key in ("tokens_per_s", "goodput_tokens_per_s", "ttft_p99_s",
+                "itl_p99_s", "finished_frac", "deadline_met_frac"):
+        assert key in report["metrics"], key
+    assert report["metrics"]["finished_frac"]["mean"] == 1.0
+
+    md = to_markdown(report)
+    assert tier_name in md and "SLO holds" in md
+
+
+def test_slo_violation_is_reported(small_model):
+    """An impossible bound must produce a structured violation, not a
+    crash — the sweep relies on this verdict."""
+    cfg, params = small_model
+    results = replay(
+        lambda: ServeEngine(cfg, params, paged=True, **KW),
+        micro_trace(seed=32, n_requests=3, max_tokens=2),
+        samples=1, timeout=180.0, name="engine")
+    report = slo_report(results, SLO(ttft_p99_s=1e-9))
+    assert not report["slo"]["ok"]
+    (viol,) = report["slo"]["violations"]
+    assert viol["metric"] == "ttft_p99_s"
+    assert viol["worst"] > 1e-9
+    assert "SLO violated" in to_markdown(report)
