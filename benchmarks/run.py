@@ -1606,6 +1606,76 @@ def bench_serve_trace() -> None:
     })
 
 
+# ======================= beyond paper: observability overhead (obs)
+def bench_serve_obs() -> None:
+    """Tracing overhead on the colocated serving path: one seeded trace
+    replayed on the same warm engine with tracing off vs sampled-on
+    (``Recorder(sample=0.5)``), interleaved off/on per sample so
+    machine-load drift hits both modes alike. The gated claim: tokens/s
+    with tracing on stays >= 0.95x of tracing off.
+
+    Side effects: writes ``trace.json`` (the Chrome/Perfetto export of
+    the traced samples — the CI artifact next to BENCH_serve.json) and
+    appends an ``obs`` block with the overhead ratio plus the recorder's
+    SLO cause attribution (queue delay vs compute vs shipping vs
+    notification latency).
+    """
+    import jax
+    from repro.bench import Replayer, synthetic_trace
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.obs import Recorder
+    from repro.serve import ServeEngine
+
+    cfg = get_config("paper_demo", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    n_requests = 8 if QUICK else 16
+    trace = synthetic_trace(
+        n_requests, seed=1021, vocab_size=cfg.vocab_size,
+        arrival="poisson", rate_qps=50.0, prompt_len=(12, 12),
+        output_len=(8, 16), output_alpha=1.2, n_prefix_groups=2,
+        shared_len=8, name="serve_obs")
+    rec = Recorder(sample=0.5)
+    offs, ons, ratios = [], [], []
+    with Replayer(lambda: ServeEngine(cfg, params, paged=True,
+                                      max_batch=4, max_cache_len=64,
+                                      page_size=8, max_seq_len=32),
+                  name="engine") as rp:
+        for _ in range(SAMPLES):
+            off = rp.run(trace, samples=1, timeout=600)[0]
+            rp.recorder = rec       # traced window: this sample only
+            on = rp.run(trace, samples=1, timeout=600)[0]
+            rp.recorder = None
+            off_tok = off.metrics()["tokens_per_s"]
+            on_tok = on.metrics()["tokens_per_s"]
+            offs.append(off_tok)
+            ons.append(on_tok)
+            ratios.append({"trace_overhead_tokens_per_s":
+                           on_tok / max(off_tok, 1e-9)})
+    var = _variance(ratios)
+    ratio = var["trace_overhead_tokens_per_s"]["mean"]
+    rec.write("trace.json")
+    cause = rec.cause_summary()
+    emit("serve.obs.off", 0.0,
+         f"{sum(offs) / len(offs):.0f}_tok_per_s_untraced")
+    emit("serve.obs.on", 0.0,
+         f"{sum(ons) / len(ons):.0f}_tok_per_s_sample_{rec.sample:g}")
+    emit("serve.obs.overhead", 0.0,
+         f"{ratio:.3f}x_on_vs_off_{cause['events']}_events_"
+         f"{cause['dropped']}_dropped")
+    _append_block("obs", {
+        "workload": dict(trace.meta, n_requests=n_requests),
+        "samples": SAMPLES,
+        "sample_rate": rec.sample,
+        "off_tokens_per_s": sum(offs) / len(offs),
+        "on_tokens_per_s": sum(ons) / len(ons),
+        "trace_overhead_tokens_per_s": ratio,
+        "cause": cause,
+        "trace_json": "trace.json",
+        "variance": var,
+    })
+
+
 # ========================= beyond paper: API layer (flags + await bridge)
 def bench_api() -> None:
     """Per-registration flag overhead and awaitable-bridge notification
@@ -1744,12 +1814,12 @@ ALL_BENCHES = (bench_notification, bench_scheduler, bench_zones,
                bench_train_overlap, bench_serve, bench_serve_paged,
                bench_serve_kernel, bench_serve_spec, bench_serve_stream,
                bench_serve_disagg, bench_serve_router,
-               bench_serve_trace, bench_api)
+               bench_serve_trace, bench_serve_obs, bench_api)
 QUICK_BENCHES = (bench_notification, bench_scheduler, bench_loc,
                  bench_serve, bench_serve_paged, bench_serve_kernel,
                  bench_serve_spec, bench_serve_stream,
                  bench_serve_disagg, bench_serve_router,
-                 bench_serve_trace, bench_api)
+                 bench_serve_trace, bench_serve_obs, bench_api)
 
 
 def _append_history(args: argparse.Namespace) -> None:

@@ -1,0 +1,148 @@
+"""Metric trend table over ``benchmarks/history.jsonl``.
+
+``run.py`` appends one compact record per invocation (git SHA,
+timestamp, gated + recorded metric values); this script turns the tail
+of that log into a trend table so drift is visible *across* commits,
+not just against the single committed baseline the regression gate
+checks. For every metric it shows the last N observed values (oldest
+first), the delta of the newest run against the one before it, and the
+coefficient of variation over the window — a metric that wanders
+run-to-run shows a fat cv long before it trips the gate.
+
+Like ``check_regression.py`` this runs without ``PYTHONPATH=src`` (CI
+calls it with the system python); stdlib only. Plain table to stdout,
+``--summary PATH`` appends the markdown version (CI passes
+``$GITHUB_STEP_SUMMARY``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+# trend rows: (metric, [values oldest->newest], delta, cv)
+Row = Tuple[str, List[float], Optional[float], Optional[float]]
+
+
+def load_history(path: Path) -> List[dict]:
+    """Parse the jsonl log, skipping unparseable lines (a killed run can
+    leave a torn tail; history is best-effort by design)."""
+    records = []
+    try:
+        text = path.read_text()
+    except OSError:
+        return records
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if isinstance(rec, dict):
+            records.append(rec)
+    return records
+
+
+def _series(records: List[dict]) -> Dict[str, List[float]]:
+    """Per-metric value series, oldest record first. Gated metrics lead
+    (they are what the gate protects), recorded ones follow; a run that
+    didn't measure a metric (``--only`` subset) just leaves a gap."""
+    order: List[str] = []
+    series: Dict[str, List[float]] = {}
+    for group in ("metrics", "recorded"):
+        for rec in records:
+            for name in rec.get(group, {}):
+                if name not in series:
+                    order.append(name)
+                    series[name] = []
+    for name in order:
+        for rec in records:
+            val = rec.get("metrics", {}).get(name)
+            if val is None:
+                val = rec.get("recorded", {}).get(name)
+            if val is not None:
+                try:
+                    series[name].append(float(val))
+                except (TypeError, ValueError):
+                    pass
+    return {name: series[name] for name in order if series[name]}
+
+
+def trend_rows(records: List[dict], last_n: int) -> List[Row]:
+    rows: List[Row] = []
+    for name, values in _series(records).items():
+        window = values[-last_n:]
+        delta = window[-1] - window[-2] if len(window) >= 2 else None
+        cv = None
+        if len(window) >= 2:
+            mean = sum(window) / len(window)
+            if abs(mean) > 1e-12:
+                var = sum((v - mean) ** 2 for v in window) / len(window)
+                cv = math.sqrt(var) / abs(mean)
+        rows.append((name, window, delta, cv))
+    return rows
+
+
+def _fmt(v: Optional[float], signed: bool = False) -> str:
+    if v is None:
+        return "-"
+    return f"{v:+.3f}" if signed else f"{v:.3f}"
+
+
+def render_text(rows: List[Row], n_runs: int) -> str:
+    header = (f"{'metric':<38} {'runs':>4} {'latest':>9} "
+              f"{'delta':>8} {'cv':>6}  history (oldest first)")
+    lines = [f"metric trends over the last {n_runs} run(s) in "
+             f"history.jsonl", header, "-" * len(header)]
+    for name, window, delta, cv in rows:
+        hist = " ".join(f"{v:.3f}" for v in window)
+        lines.append(f"{name:<38} {len(window):>4} {window[-1]:>9.3f} "
+                     f"{_fmt(delta, signed=True):>8} {_fmt(cv):>6}  "
+                     f"{hist}")
+    return "\n".join(lines)
+
+
+def render_markdown(rows: List[Row], n_runs: int) -> str:
+    md = [f"### benchmark metric trends (last {n_runs} runs)", "",
+          "| metric | runs | latest | Δ vs prev | cv | history |",
+          "| --- | ---: | ---: | ---: | ---: | --- |"]
+    for name, window, delta, cv in rows:
+        hist = " ".join(f"{v:.3f}" for v in window)
+        md.append(f"| {name} | {len(window)} | {window[-1]:.3f} "
+                  f"| {_fmt(delta, signed=True)} | {_fmt(cv)} "
+                  f"| {hist} |")
+    return "\n".join(md)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--history", default="benchmarks/history.jsonl",
+                    help="jsonl log written by benchmarks/run.py")
+    ap.add_argument("--last", type=int, default=8, metavar="N",
+                    help="window size: newest N runs per metric")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="append the markdown table to PATH (CI passes "
+                    "$GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args()
+
+    records = load_history(Path(args.history))
+    if not records:
+        # nothing to trend yet (fresh clone, first CI run): not an error
+        print(f"no history records in {args.history}; nothing to trend")
+        return 0
+    n_runs = min(args.last, len(records))
+    rows = trend_rows(records, args.last)
+    print(render_text(rows, n_runs))
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(render_markdown(rows, n_runs) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

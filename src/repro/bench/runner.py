@@ -40,6 +40,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 from repro.bench.stats import percentile
 from repro.bench.trace import Trace, TraceRequest
+from repro.obs.recorder import Recorder
 from repro.serve.api import ServeClient
 from repro.serve.config import GenerationConfig, QuotaExceeded
 from repro.serve.protocol import EngineLike
@@ -178,11 +179,16 @@ class Replayer:
     """
 
     def __init__(self, tier: Union[EngineLike, Callable[[], EngineLike]],
-                 *, name: Optional[str] = None) -> None:
+                 *, name: Optional[str] = None,
+                 recorder: Optional[Recorder] = None) -> None:
         engine = tier() if callable(tier) and not isinstance(
             tier, EngineLike) else tier
         self.client = ServeClient(engine=engine)
         self.tier_name = name or type(engine).__name__
+        #: optional ``obs.Recorder``: measured samples run traced (warmup
+        #: and the throwaway replay stay untraced), accumulating request
+        #: timelines + lifecycle histograms for SLO cause attribution
+        self.recorder = recorder
         self._warmed = False
 
     # ------------------------------------------------------------------ runs
@@ -208,7 +214,16 @@ class Replayer:
             # inside the first measured sample
             self._run_once(trace, -1, timeout)
             self._warmed = True
-        return [self._run_once(trace, i, timeout) for i in range(samples)]
+        if self.recorder is not None:
+            # trace only the measured window: warmup and the throwaway
+            # replay above ran with tracing off
+            self.recorder.start()
+        try:
+            return [self._run_once(trace, i, timeout)
+                    for i in range(samples)]
+        finally:
+            if self.recorder is not None:
+                self.recorder.stop()
 
     def _run_warmup(self, trace: Trace, n: int, timeout: float) -> None:
         # cover every distinct prompt-length *shape* the trace will hit
@@ -346,12 +361,12 @@ class Replayer:
 
 def replay(tier: Union[EngineLike, Callable[[], EngineLike]],
            trace: Trace, *, samples: int = 1, warmup: Optional[int] = 2,
-           timeout: float = 300.0,
-           name: Optional[str] = None) -> List[RunResult]:
+           timeout: float = 300.0, name: Optional[str] = None,
+           recorder: Optional[Recorder] = None) -> List[RunResult]:
     """One-shot convenience: build a ``Replayer`` over ``tier``, replay
     ``trace`` ``samples`` times, shut the tier down, return the results.
     Keep a ``Replayer`` instead when the tier should stay warm across
     traces (the saturation sweep does)."""
-    with Replayer(tier, name=name) as rp:
+    with Replayer(tier, name=name, recorder=recorder) as rp:
         return rp.run(trace, samples=samples, warmup=warmup,
                       timeout=timeout)

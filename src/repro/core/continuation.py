@@ -37,6 +37,8 @@ from repro.core.completable import Completable
 from repro.core.flags import ResolvedPolicy, resolve
 from repro.core.info import ContinueInfo, make_info
 from repro.core.status import OpState, Status
+from repro.obs import events as _obs_events
+from repro.obs import tracer as _obs
 
 # Callback signature mirrors MPIX_Continue_cb_function(statuses, cb_data).
 ContinueCallback = Callable[[Optional[List[Status]], Any], None]
@@ -109,7 +111,8 @@ class Continuation:
     """One registered callback, possibly spanning several operations."""
 
     __slots__ = ("cb", "cb_data", "ops", "statuses", "cr", "policy",
-                 "_remaining", "_lock", "state", "seqno")
+                 "_remaining", "_lock", "state", "seqno",
+                 "t_posted", "t_ready", "t_enqueued")
 
     def __init__(self, cb: ContinueCallback, cb_data: Any,
                  ops: Sequence[Completable],
@@ -131,6 +134,11 @@ class Continuation:
         self._lock = threading.Lock()
         self.state = ContinuationState.WAITING
         self.seqno = 0  # set by the engine; FIFO fairness in ready queues
+        # lifecycle-edge trace stamps; ``t_posted is not None`` == this
+        # continuation was sampled at registration (obs.tracer)
+        self.t_posted = None
+        self.t_ready = None
+        self.t_enqueued = None
 
     def _op_done(self, index: int, status: Status) -> None:
         """Hook target: operation ``index`` completed with ``status``."""
@@ -143,6 +151,12 @@ class Continuation:
                 self.state = ContinuationState.READY
                 ready = True
         if ready:
+            # lifecycle edge 2/4: the op group completed (WAITING -> READY)
+            if self.t_posted is not None:
+                tr = _obs.TRACE
+                if tr is not None:
+                    self.t_ready = ts = tr.now()
+                    tr.evt(_obs_events.CONT_READY, self.seqno, "core", ts=ts)
             self.cr._continuation_ready(self)
 
     def hook_for(self, index: int):
@@ -204,6 +218,12 @@ class ContinuationRequest(Completable):
         """Routing, resolved per registration: poll_only continuations go
         to this CR's private queue; others to the engine's scheduler (which
         may execute inline when the continuation's policy allows)."""
+        # lifecycle edge 3/4: enqueued on a ready queue (either route)
+        if cont.t_posted is not None:
+            tr = _obs.TRACE
+            if tr is not None:
+                cont.t_enqueued = ts = tr.now()
+                tr.evt(_obs_events.CONT_ENQUEUED, cont.seqno, "core", ts=ts)
         if cont.policy.poll_only:
             with self._lock:
                 self._ready_q.push(cont)

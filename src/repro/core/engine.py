@@ -49,6 +49,8 @@ from repro.core.progress import Progress
 from repro.core.scheduler import (Scheduler, in_callback, in_registration,
                                   make_scheduler, registration_guard)
 from repro.core.status import Status
+from repro.obs import events as _obs_events
+from repro.obs import tracer as _obs
 
 # Back-compat aliases: these lived here before the scheduler split.
 _in_callback = in_callback
@@ -166,6 +168,14 @@ class Engine:
 
         cont = Continuation(cb, cb_data, ops, statuses, cr, policy)
         cont.seqno = next(self._seq)
+        # lifecycle edge 1/4: ops posted with a continuation attached. The
+        # sampling decision made here sticks for the continuation's whole
+        # lifetime (later edges gate on ``t_posted is not None``).
+        tr = _obs.TRACE
+        if tr is not None and tr.want(cont.seqno):
+            cont.t_posted = ts = tr.now()
+            tr.evt(_obs_events.CONT_POSTED, cont.seqno, "core", ts=ts,
+                   meta=_obs_events.policy_key(policy))
         try:
             cr._register()           # raises on a freed CR
         except BaseException:

@@ -47,6 +47,7 @@ from typing import Dict, List, Optional, Sequence
 from repro.core.continuation import (ClassDeque, Continuation,
                                      ContinuationRequest)
 from repro.core.info import THREAD_ANY
+from repro.obs import tracer as _obs
 
 _TLS = threading.local()
 
@@ -144,11 +145,19 @@ class Scheduler:
         self.drain(limit=self.inline_limit, inline=True)
 
     def run_one(self, cont: Continuation) -> None:
+        # lifecycle edge 4/4: callback execution. Stamped only for
+        # continuations sampled at registration; the span + all four
+        # inter-edge histograms are emitted by ``lifecycle_ran``.
+        tr = _obs.TRACE
+        t_run = (tr.now() if tr is not None and cont.t_posted is not None
+                 else None)
         _TLS.depth = getattr(_TLS, "depth", 0) + 1
         try:
             err = cont.run()
         finally:
             _TLS.depth -= 1
+        if t_run is not None:
+            tr.lifecycle_ran(cont, t_run)
         cont.cr._deregister(err, cont.policy)
 
     def drain(self, limit: int = -1, inline: bool = False,

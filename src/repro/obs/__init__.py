@@ -1,0 +1,48 @@
+"""Continuation-runtime observability: tracing, timelines, metrics export.
+
+The paper's claim — low-latency in-runtime completion notification — is
+only verifiable if the runtime can account for where each microsecond
+between "operation complete" and "callback ran" goes. This subsystem
+provides that accounting with near-zero cost when disabled:
+
+* ``obs.tracer`` — the global default-off ``Tracer``: lock-free
+  per-thread ring buffers (``obs.buffer.TraceBuffer``, drop-not-block on
+  overflow with a surfaced drop counter), deterministic id-hash
+  sampling, and per-policy lifecycle histograms (``obs.hist``).
+* ``obs.events`` — the event taxonomy: the four continuation lifecycle
+  edges (posted -> completed -> enqueued -> ran) and the serve-layer
+  ``req.*`` spans correlated by request id across disagg roles and
+  router shadow-replays (``req.link``).
+* ``obs.export`` — Chrome/Perfetto ``trace_event`` JSON timelines and a
+  Prometheus-style text snapshot unifying ``ServeMetrics`` and
+  ``Transport.stats()``.
+* ``obs.recorder`` — the ``Recorder`` handle the bench ``Replayer``
+  attaches to trace measured samples and attribute SLO outcomes to
+  runtime-internal causes (queue delay vs compute vs shipping).
+
+Usage::
+
+    from repro import obs
+
+    obs.start(sample=1.0)          # or REPRO_TRACE=1 in the environment
+    ... run traced work ...
+    tr = obs.stop()
+    doc = obs.chrome_trace(tr.drain(), histograms=tr.histograms(),
+                           dropped=tr.dropped)
+"""
+from repro.obs.buffer import TraceBuffer
+from repro.obs.events import (CONT_ENQUEUED, CONT_POSTED, CONT_RAN,
+                              CONT_READY, LIFECYCLE_EDGES, Event, link_roots,
+                              policy_key)
+from repro.obs.export import chrome_trace, prometheus_text
+from repro.obs.hist import Histogram
+from repro.obs.recorder import Recorder
+from repro.obs.tracer import (Tracer, active, is_enabled, start, stop)
+
+__all__ = [
+    "TraceBuffer", "Event", "Histogram", "Tracer", "Recorder",
+    "CONT_POSTED", "CONT_READY", "CONT_ENQUEUED", "CONT_RAN",
+    "LIFECYCLE_EDGES", "link_roots", "policy_key",
+    "chrome_trace", "prometheus_text",
+    "active", "is_enabled", "start", "stop",
+]

@@ -42,6 +42,8 @@ import time
 from typing import Any, Callable, Iterator, List, Optional, Union
 
 from repro.core import Promise, PromiseCancelled, Signal
+from repro.obs import events as _obs_events
+from repro.obs import tracer as _obs
 from repro.serve.config import DeadlineExceeded, GenerationConfig
 from repro.serve.engine import ServeEngine
 from repro.serve.metrics import ServeMetrics
@@ -225,6 +227,11 @@ class Session:
         base = config if config is not None else self.defaults
         cfg = base.merged(**overrides) if overrides else base
         request = Request(prompt, cfg)
+        tr = _obs.TRACE
+        if tr is not None and tr.want(request.req_id):
+            # client-side edge of the timeline: everything between this
+            # instant and the tier's own req.submit is client overhead
+            tr.evt(_obs_events.REQ_SUBMIT, request.req_id, "client")
         stream = TokenStream(request, detokenize=self.client.detokenize)
         self.client.submit(request)
         with self._lock:

@@ -78,11 +78,13 @@ import numpy as np
 from repro.core import (ArrayOp, ContinueFlags, Engine, OpState, Scheduler,
                         Transport, when_all)
 from repro.models.common import ModelConfig
+from repro.obs import events as _obs_events
+from repro.obs import tracer as _obs
 from repro.serve.batcher import Batcher
 from repro.serve.drafter import Drafter
 from repro.serve.engine import ServeEngine, _step_flags
 from repro.serve.kv_cache import paged_supported, pages_for, PagePool
-from repro.serve.metrics import ServeMetrics
+from repro.serve.metrics import ServeMetrics, transport_fields
 from repro.serve.request import Request, RequestState, summarize
 from repro.serve.steps import make_fused_paged_suffix_step
 
@@ -101,6 +103,31 @@ _FLAGS = ContinueFlags(enqueue_complete=True)
 def block_tag(req_id: int) -> int:
     """Per-request KV-block channel tag."""
     return _BLOCK_TAG_BASE + req_id
+
+
+# handoff-lifecycle ``_log`` kinds -> trace-event kinds. ``seat`` is
+# omitted: ``ServeEngine._seat_slot`` (shared with the colocated path)
+# already emits ``req.seat``.
+_LOG_EVENTS = {
+    "ship": _obs_events.REQ_KV_SHIP,
+    "install": _obs_events.REQ_KV_IMPORT,
+    "header": "req.kv.announce",
+    "prefill_done": "req.prefill.done",
+    "landed": "req.kv.landed",
+    "abort": "req.abort",
+    "prefill_released": _obs_events.REQ_PAGES_RELEASE,
+}
+
+
+def _trace_log(kind: str, req_id: int, rest: tuple, src: str) -> None:
+    """Mirror a handoff-lifecycle record into the tracer (same sampling
+    as every other ``req.*`` event, so timelines stay complete)."""
+    tr = _obs.TRACE
+    if tr is None:
+        return
+    ek = _LOG_EVENTS.get(kind)
+    if ek is not None and tr.want(req_id):
+        tr.evt(ek, req_id, src, meta=rest[0] if rest else None)
 
 
 # --------------------------------------------------------------- messages
@@ -252,6 +279,10 @@ class PrefillWorker:
                 self.stats["deferred"] += 1
                 break
             self._queue.popleft()
+            tr = _obs.TRACE
+            if tr is not None and tr.want(req.req_id):
+                tr.evt(_obs_events.REQ_PAGES_ALLOC, req.req_id, "prefill",
+                       meta=len(table))
             ship = req.max_new_tokens > 1
             job = _PrefillJob(req, prompt, n_ship, table, ship)
             self._jobs[req.req_id] = job
@@ -322,12 +353,22 @@ class PrefillWorker:
             op = ArrayOp(job.first_arr)
         else:
             op = ArrayOp(logits)
-        self.engine.continue_when(op, self._on_chunk, (job, end),
+        tr = _obs.TRACE
+        t0 = (tr.now() if tr is not None and tr.want(job.req.req_id)
+              else None)
+        self.engine.continue_when(op, self._on_chunk, (job, end, t0),
                                   cr=self.cr,
                                   flags=_step_flags(job.req.priority))
 
     def _on_chunk(self, statuses, meta) -> None:
-        job, end = meta
+        job, end, t0 = meta
+        if t0 is not None:
+            tr = _obs.TRACE
+            if tr is not None:
+                # one span per prefill chunk: dispatch -> device-complete,
+                # interleaving with the per-block ship instants
+                tr.evt(_obs_events.REQ_PREFILL, job.req.req_id, "prefill",
+                       ts=t0, dur=tr.now() - t0, meta=end)
         job.chunk_inflight = False
         job.pos = end
         req = job.req
@@ -471,6 +512,7 @@ class PrefillWorker:
     def _log(self, kind: str, req_id: int, *rest: Any) -> None:
         if self._events is not None:
             self._events.append((kind, req_id) + rest)
+        _trace_log(kind, req_id, rest, "prefill")
 
 
 # ----------------------------------------------------------- decode role
@@ -592,6 +634,10 @@ class DecodeWorker(ServeEngine):
         if table is None:
             return False
         req.page_ids = table
+        tr = _obs.TRACE
+        if tr is not None and tr.want(req.req_id):
+            tr.evt(_obs_events.REQ_PAGES_ALLOC, req.req_id, "decode",
+                   meta=len(table))
         landing.active = True
         self._ensure_state()
         for _ in range(landing.n_ship):
@@ -736,6 +782,7 @@ class DecodeWorker(ServeEngine):
     def _log(self, kind: str, req_id: int, *rest: Any) -> None:
         if self._events is not None:
             self._events.append((kind, req_id) + rest)
+        _trace_log(kind, req_id, rest, "decode")
 
 
 # --------------------------------------------------------------- facade
@@ -820,6 +867,9 @@ class DisaggServer:
                 > self.prefill.pool.total_pages:
             raise ValueError("prompt needs more pages than the prefill "
                              f"pool holds ({self.prefill.pool.total_pages})")
+        tr = _obs.TRACE
+        if tr is not None and tr.want(request.req_id):
+            tr.evt(_obs_events.REQ_SUBMIT, request.req_id, "serve")
         return self.batcher.submit(request)
 
     def close_intake(self) -> None:
@@ -835,7 +885,12 @@ class DisaggServer:
         role; the decode role is told to expect each one first (the
         header may race ahead on the control channel otherwise)."""
         reqs = self.batcher.admit(self.prefill.capacity)
+        tr = _obs.TRACE
         for req in reqs:
+            if tr is not None and tr.want(req.req_id):
+                tr.evt(_obs_events.REQ_ADMIT, req.req_id, "serve",
+                       ts=req.arrival_time,
+                       dur=tr.now() - req.arrival_time)
             if req.max_new_tokens > 1:
                 self.decode.expect(req)
             self.prefill.start(req)
@@ -884,7 +939,9 @@ class DisaggServer:
         out["total_pages"] = self.decode.pool.total_pages
         out["decode"] = self.decode.metrics()
         out["prefill"] = self.prefill.metrics()
-        out["transport"] = self.transport.stats()
+        st = self.transport.stats()
+        out["transport"] = st
+        out.update(transport_fields(st))
         shipped = self.prefill.stats["blocks_shipped"]
         jobs = self.prefill.stats["jobs"]
         out["blocks_shipped"] = shipped

@@ -81,6 +81,8 @@ import numpy as np
 
 from repro.core import ArrayOp, ContinueFlags, Engine, Promise, Scheduler
 from repro.models import lm
+from repro.obs import events as _obs_events
+from repro.obs import tracer as _obs
 from repro.models.common import AUDIO, ModelConfig
 from repro.serve.batcher import Batcher
 from repro.serve.drafter import Drafter, NgramDrafter
@@ -293,6 +295,9 @@ class ServeEngine:
                 raise ValueError(
                     f"request needs more pages than the pool holds "
                     f"({self.pool.total_pages})")
+        tr = _obs.TRACE
+        if tr is not None and tr.want(request.req_id):
+            tr.evt(_obs_events.REQ_SUBMIT, request.req_id, "engine")
         return self.batcher.submit(request)
 
     def submit_async(self, request: Request) -> Promise:
@@ -370,6 +375,14 @@ class ServeEngine:
         capacity); True = placed (or answered outright by prefill)."""
         prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
         plen = prompt.shape[1]
+        tr = _obs.TRACE
+        t0 = None
+        if tr is not None and tr.want(req.req_id):
+            # the admission span runs arrival -> placement: the queue
+            # delay the SLO report attributes to intake, not compute
+            t0 = tr.now()
+            tr.evt(_obs_events.REQ_ADMIT, req.req_id, "engine",
+                   ts=req.arrival_time, dur=t0 - req.arrival_time)
         if req.max_new_tokens == 1:
             # single-token request: prefill answers it outright; it never
             # occupies a decode slot (nor, in paged mode, any pages)
@@ -378,7 +391,7 @@ class ServeEngine:
             req.push_device_token(first[0])
             self.stats["prefills"] += 1
             self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
-                                      (req, True, None, first),
+                                      (req, True, None, first, t0),
                                       cr=self.cr_steps,
                                       flags=_step_flags(req.priority))
             return True
@@ -408,7 +421,7 @@ class ServeEngine:
                    np.asarray(req.prompt, np.int32).reshape(-1)]
         self._seat_slot(slot, req, first[:, None], plen, ctx=ctx)
         self.engine.continue_when(ArrayOp(first), self._on_prefill_done,
-                                  (req, False, slot, first),
+                                  (req, False, slot, first, t0),
                                   cr=self.cr_steps,
                                   flags=_step_flags(req.priority))
         return True
@@ -422,6 +435,9 @@ class ServeEngine:
         input token: a device ``(1, 1)`` array from a local prefill, or a
         host int delivered by a remote prefill role. ``req.page_ids``
         must already hold the request's pages (paged mode)."""
+        tr = _obs.TRACE
+        if tr is not None and tr.want(req.req_id):
+            tr.evt(_obs_events.REQ_SEAT, req.req_id, "engine", meta=slot)
         if self.paged:
             self._tables[slot, :] = self.pool.null_page
             self._tables[slot, :len(req.page_ids)] = req.page_ids
@@ -449,6 +465,10 @@ class ServeEngine:
         table = shared + owned
         req.page_ids = table
         req.shared_prefix_tokens = len(shared) * ps
+        tr = _obs.TRACE
+        if tr is not None and tr.want(req.req_id):
+            tr.evt(_obs_events.REQ_PAGES_ALLOC, req.req_id, "engine",
+                   meta=len(table))
 
         if shared:
             # prefix hit: shared pages already hold positions [0, m*ps);
@@ -529,7 +549,12 @@ class ServeEngine:
         return self._tables_dev
 
     def _on_prefill_done(self, statuses, meta) -> None:
-        req, retire_now, slot, first = meta
+        req, retire_now, slot, first, t0 = meta
+        if t0 is not None:
+            tr = _obs.TRACE
+            if tr is not None:
+                tr.evt(_obs_events.REQ_PREFILL, req.req_id, "engine",
+                       ts=t0, dur=tr.now() - t0)
         req.on_first_token()
         # deliver the first token (array complete by continuation time, so
         # int() never blocks): streams see it here — before retirement —
@@ -613,8 +638,10 @@ class ServeEngine:
         self.stats["slot_steps"] += len(live)
         self.stats["padded_steps"] += self.max_batch - len(live)
         self.stats["max_active"] = max(self.stats["max_active"], len(live))
+        tr = _obs.TRACE
+        t0 = tr.now() if tr is not None else None
         self.engine.continue_when(ArrayOp(nxt), self._on_step_done,
-                                  (stepped, nxt), cr=self.cr_steps,
+                                  (stepped, nxt, t0), cr=self.cr_steps,
                                   flags=_step_flags(prio))
         return True
 
@@ -624,10 +651,18 @@ class ServeEngine:
         retire slots that finished — by budget, by a stop-sequence match,
         or by deadline expiry — releasing their pages in this same
         continuation."""
-        stepped, nxt = meta
+        stepped, nxt, t0 = meta
         self._inflight -= 1
         arr = np.asarray(nxt)
         now = time.monotonic()
+        tr = _obs.TRACE
+        if tr is not None and t0 is not None:
+            # one span per sampled request riding this step: dispatch ->
+            # device-complete, the timeline's per-token compute block
+            for slot, req, _ in stepped:
+                if tr.want(req.req_id):
+                    tr.evt(_obs_events.REQ_STEP, req.req_id, "engine",
+                           ts=t0, dur=now - t0, meta=slot)
         for slot, req, done in stepped:
             if done:
                 self._draining.discard(slot)
@@ -725,8 +760,10 @@ class ServeEngine:
         self.stats["padded_steps"] += self.max_batch - len(live)
         self.stats["draft_proposed"] += int(n_drafts.sum())
         self.stats["max_active"] = max(self.stats["max_active"], len(live))
+        tr = _obs.TRACE
+        t0 = tr.now() if tr is not None else None
         self.engine.continue_when(ArrayOp(emitted), self._on_verify_done,
-                                  (live, emitted, accepts, n_drafts),
+                                  (live, emitted, accepts, n_drafts, t0),
                                   cr=self.cr_steps,
                                   flags=_step_flags(
                                       max(r.priority for _, r in live)))
@@ -738,11 +775,17 @@ class ServeEngine:
         accept lengths advance each slot independently; a slot whose
         accepted run reaches its token budget retires right here,
         mid-verify, through the same continuation."""
-        live, emitted, accepts, n_drafts = meta
+        live, emitted, accepts, n_drafts, t0 = meta
         self._inflight -= 1
         emitted = np.asarray(emitted)
         accepts = np.asarray(accepts)
         now = time.monotonic()
+        tr = _obs.TRACE
+        if tr is not None and t0 is not None:
+            for i, req in live:
+                if tr.want(req.req_id):
+                    tr.evt(_obs_events.REQ_STEP, req.req_id, "engine",
+                           ts=t0, dur=now - t0, meta=i)
         upd_slots: List[int] = []
         upd_tokens: List[int] = []
         for i, req in live:
@@ -838,6 +881,10 @@ class ServeEngine:
 
     def _release_pages(self, req: Request) -> None:
         if self.paged and req.page_ids:
+            tr = _obs.TRACE
+            if tr is not None and tr.want(req.req_id):
+                tr.evt(_obs_events.REQ_PAGES_RELEASE, req.req_id, "engine",
+                       meta=len(req.page_ids))
             self.pool.release(req.page_ids)
             req.page_ids = []
 

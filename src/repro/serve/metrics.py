@@ -30,10 +30,50 @@ LEGACY_ALIASES: Dict[str, str] = {
     "pool_page_size": "page_size",
 }
 
-# dataclass fields every tier reports (``extra`` carries the rest)
+# dataclass fields every tier reports (``extra`` carries the rest).
+# The ``transport_*`` family is zero for tiers without a transport
+# (colocated ``ServeEngine``); transport-connected tiers fill them via
+# ``transport_fields`` from their ``Transport.stats()`` per-tag counters.
 _TYPED_FIELDS = ("finished", "total_tokens", "ttft_mean", "ttft_p50",
                  "ttft_p99", "accept_rate", "retired", "pages_in_use",
-                 "total_pages")
+                 "total_pages", "transport_sent_msgs",
+                 "transport_recvd_msgs", "transport_sent_bytes",
+                 "transport_recvd_bytes", "transport_ctrl_bytes",
+                 "transport_data_bytes")
+
+# data-plane tags (per-request KV-block channels) start here; everything
+# below is control plane (headers, routing, gossip, heartbeats)
+_DATA_TAG_BASE = 1 << 16
+
+
+def transport_fields(stats: Dict[str, Any]) -> Dict[str, Any]:
+    """Lift a ``Transport.stats()`` snapshot into the typed
+    ``transport_*`` metric fields.
+
+    Message counts sum delivered traffic per tag; the byte split
+    classifies tags into control plane (< ``1 << 16``: headers, routing,
+    gossip, heartbeats) vs data plane (per-request KV-block channels),
+    so dashboards separate shipping bandwidth from control chatter
+    without parsing the nested per-tag dict.
+    """
+    sent_msgs = recvd_msgs = 0
+    ctrl = data = 0
+    for tag, t in stats.get("per_tag", {}).items():
+        sent_msgs += t.get("sent_msgs", 0)
+        recvd_msgs += t.get("recvd_msgs", 0)
+        b = t.get("sent_bytes", 0)
+        if int(tag) >= _DATA_TAG_BASE:
+            data += b
+        else:
+            ctrl += b
+    return {
+        "transport_sent_msgs": sent_msgs,
+        "transport_recvd_msgs": recvd_msgs,
+        "transport_sent_bytes": stats.get("sent_bytes", 0),
+        "transport_recvd_bytes": stats.get("recvd_bytes", 0),
+        "transport_ctrl_bytes": ctrl,
+        "transport_data_bytes": data,
+    }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,7 +85,9 @@ class ServeMetrics(Mapping):
       ``accept_rate``;
     * lifecycle: ``retired``;
     * KV residency (the leak-check pair): ``pages_in_use``,
-      ``total_pages``.
+      ``total_pages``;
+    * transport traffic (zero for colocated tiers): ``transport_*``
+      message/byte counters with a control-vs-data-plane byte split.
 
     Everything tier-specific (step counters, ingest stats, nested role
     metrics, transport stats, …) lives in ``extra`` and is reachable
@@ -62,6 +104,12 @@ class ServeMetrics(Mapping):
     retired: int = 0
     pages_in_use: int = 0
     total_pages: int = 0
+    transport_sent_msgs: int = 0
+    transport_recvd_msgs: int = 0
+    transport_sent_bytes: int = 0
+    transport_recvd_bytes: int = 0
+    transport_ctrl_bytes: int = 0
+    transport_data_bytes: int = 0
     extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @classmethod

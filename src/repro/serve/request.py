@@ -45,6 +45,8 @@ from typing import Any, List, Optional, Sequence, Union
 
 from repro.core.completable import Completable
 from repro.core.status import OpState, Status
+from repro.obs import events as _obs_events
+from repro.obs import tracer as _obs
 from repro.serve.config import DeadlineExceeded, GenerationConfig
 
 _req_ids = itertools.count()
@@ -270,6 +272,10 @@ class Request(Completable):
             if committed:
                 self.token_times.extend(
                     [time.monotonic()] * len(committed))
+                tr = _obs.TRACE
+                if tr is not None and tr.want(self.req_id):
+                    tr.evt(_obs_events.REQ_DELIVER, self.req_id, "serve",
+                           meta=len(committed))
                 if self._stream is not None:
                     self._stream._publish(committed)
             return "stop" if self._stop_hit else None
@@ -328,6 +334,11 @@ class Request(Completable):
                 self._stream._publish(front)
 
     # ------------------------------------------------------------- completion
+    def _trace_finish(self, reason: str) -> None:
+        tr = _obs.TRACE
+        if tr is not None and tr.want(self.req_id):
+            tr.evt(_obs_events.REQ_FINISH, self.req_id, "serve", meta=reason)
+
     def retire(self) -> bool:
         """Finish the request: finalize tokens, publish completion.
         Returns False (no-op) if the request already reached a terminal
@@ -353,6 +364,7 @@ class Request(Completable):
         # delivery lock: the terminal-state flip above already guarantees
         # delivery atomicity, and holding the lock across code that can
         # touch *other* requests could order locks ABBA
+        self._trace_finish("finished")
         if stream is not None:
             stream._close("finished")
         self._complete(Status(payload=self.tokens, count=len(self.tokens)))
@@ -377,6 +389,7 @@ class Request(Completable):
         # stream close + hooks outside the lock (see retire()); the state
         # check above makes this thread the only one reaching them, and
         # both still run before cancel() returns
+        self._trace_finish("cancelled")
         if stream is not None:
             stream._close("cancelled")
         self._complete(Status(cancelled=True), OpState.CANCELLED)
@@ -405,6 +418,7 @@ class Request(Completable):
             self._finished_evt.set()
             stream = self._stream
         # stream close + hooks outside the lock (see retire())
+        self._trace_finish("expired")
         if stream is not None:
             stream._close("expired", err)
         self._complete(Status(error=err, payload=self.tokens),

@@ -68,8 +68,10 @@ from repro.serve.batcher import FairBatcher
 from repro.serve.config import GenerationConfig, QuotaExceeded
 from repro.serve.disagg import DisaggServer
 from repro.serve.engine import ServeEngine
+from repro.obs import events as _obs_events
+from repro.obs import tracer as _obs
 from repro.serve.kv_cache import pages_for, prefix_keys
-from repro.serve.metrics import ServeMetrics
+from repro.serve.metrics import ServeMetrics, transport_fields
 from repro.serve.protocol import EngineLike
 from repro.serve.request import Request, RequestState, summarize
 
@@ -388,6 +390,9 @@ class Router:
                     f"(quota {limit}); retry in ~{retry:.3f}s",
                     tenant=tenant, retry_after_s=retry)
             self._outstanding[tenant] = held + 1
+        tr = _obs.TRACE
+        if tr is not None and tr.want(request.req_id):
+            tr.evt(_obs_events.REQ_SUBMIT, request.req_id, "router")
         tracked = _Tracked(request, self._track_seq)
         self._track_seq += 1
         self._tracked[request.req_id] = tracked
@@ -531,6 +536,13 @@ class Router:
         shadow = Request(orig.prompt, orig.config,
                          arrival_time=orig.arrival_time)
         shadow.attach_stream(_ReplayAdapter(orig, skip))
+        tr = _obs.TRACE
+        if tr is not None and tr.want(shadow.req_id):
+            # the link event lets the exporter collapse the shadow's
+            # whole replica-side timeline onto the original's track
+            # (transitively, across repeated failover re-shadows)
+            tr.evt(_obs_events.REQ_LINK, shadow.req_id, "router",
+                   meta=orig.req_id)
         tracked.shadow = shadow
         tracked.rank = worker.rank
         self._rank_inflight[worker.rank] += 1
@@ -585,12 +597,16 @@ class Router:
         stranded = sorted((t for t in self._tracked.values()
                            if t.rank == rank),
                           key=lambda t: t.seq, reverse=True)
+        tr = _obs.TRACE
         for t in stranded:
             shadow, t.shadow, t.rank = t.shadow, None, None
             t.replays += 1
             if shadow is not None and not shadow.is_terminal:
                 shadow.cancel()          # adapter ignores router cancels
             if not t.original.is_terminal:
+                if tr is not None and tr.want(t.original.req_id):
+                    tr.evt(_obs_events.REQ_REPLAY, t.original.req_id,
+                           "router", meta=rank)
                 self.batcher.requeue(t.original)
                 self.stats["requeued"] += 1
         # reclaim the dead tier's resources (pages of cancelled shadows)
@@ -656,7 +672,9 @@ class Router:
                              in self.batcher.tenant_stats.items()}
         out["per_replica"] = {w.rank: w.tier.metrics()
                               for w in self.workers}
-        out["transport"] = self.transport.stats()
+        st = self.transport.stats()
+        out["transport"] = st
+        out.update(transport_fields(st))
         return ServeMetrics.from_flat(out)
 
     def shutdown(self) -> None:

@@ -52,6 +52,10 @@ def make_doc(fused=False):
                    "failover": {"requeued": 12}},
         "disagg": {"tokens_per_s_ratio": 0.9,
                    "bytes_shipped_per_request": 6144},
+        "obs": {"trace_overhead_tokens_per_s": 0.99,
+                "cause": {"events": 1400,
+                          "notify_latency_us_mean": 280.0},
+                "variance": {"trace_overhead_tokens_per_s": v(0.01)}},
         "kernel": {"fused_kernel_active": fused},
     }
 
